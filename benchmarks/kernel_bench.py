@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: fused vs per-model scoring, streaming vs full
+top-k — CPU wall-clock for the jnp paths + interpret-mode validation of the
+Pallas kernels (the TPU numbers come from the dry-run roofline)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.index import scoring
+
+STATS = {"n_docs": 528155.0, "avg_doclen": 300.0, "total_terms": 1.58e8}
+MODELS = ("BM25", "QL", "TF_IDF")
+
+
+def _time(fn, *args, repeats=5):
+    fn(*args)  # warm-up/compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return 1e6 * min(times)
+
+
+def bench_fused_scoring(n: int = 1 << 18, pool: int = 1 << 22) -> list[dict]:
+    """The fat-postings contrast INCLUDING the postings gather — the shared
+    HBM read is where the single-pass win lives (RQ2)."""
+    rng = np.random.default_rng(0)
+    # big postings pool (simulates the inverted file resident in HBM)
+    pool_tf = jnp.asarray(rng.integers(1, 30, pool), jnp.int32)
+    pool_dl = jnp.asarray(rng.integers(20, 2000, pool), jnp.int32)
+    pool_df = jnp.asarray(rng.integers(1, 50000, pool), jnp.int32)
+    pool_cf = jnp.asarray(rng.integers(1, 500000, pool), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, pool, n), jnp.int32)
+
+    @jax.jit
+    def fused(idx):
+        tf, dl = pool_tf[idx], pool_dl[idx]
+        df, cf = pool_df[idx], pool_cf[idx]
+        return scoring.score_all(list(MODELS), tf, dl, df, cf, STATS)
+
+    @jax.jit
+    def per_model(idx):
+        outs = []
+        for m in MODELS:            # one gather PER feature pass
+            tf, dl = pool_tf[idx], pool_dl[idx]
+            df, cf = pool_df[idx], pool_cf[idx]
+            outs.append(scoring.WEIGHTING_MODELS[m](tf, dl, df, cf, STATS))
+        return outs
+
+    t_fused = _time(fused, idx)
+    t_sep = _time(per_model, idx)
+    return [{"name": "fused_scoring_gather_256k", "us_per_call": round(t_fused, 1),
+             "derived": "3models_one_gather"},
+            {"name": "per_model_scoring_256k", "us_per_call": round(t_sep, 1),
+             "derived": f"fused_speedup={t_sep/max(t_fused,1e-9):.2f}x"}]
+
+
+def bench_topk(n: int = 1 << 20, k: int = 10) -> list[dict]:
+    rng = np.random.default_rng(1)
+    scores = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+
+    topk = jax.jit(lambda s: jax.lax.top_k(s, k))
+    sort_full = jax.jit(lambda s: jnp.sort(s)[-k:])
+    t_topk = _time(topk, scores)
+    t_sort = _time(sort_full, scores)
+    return [{"name": f"lax_topk_{k}_of_1M", "us_per_call": round(t_topk, 1),
+             "derived": ""},
+            {"name": f"full_sort_1M", "us_per_call": round(t_sort, 1),
+             "derived": f"topk_speedup={t_sort/max(t_topk,1e-9):.2f}x"}]

@@ -1,0 +1,50 @@
+"""Assemble the §Perf hillclimb summary table from tagged dry-run records."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+CELLS = [
+    ("qwen2-1.5b", "train_4k"),
+    ("llama4-scout-17b-a16e", "train_4k"),
+    ("glm4-9b", "prefill_32k"),
+]
+
+
+def rows(dryrun_dir="experiments/dryrun"):
+    out = []
+    for f in sorted(Path(dryrun_dir).glob("*__sp*.json")):
+        r = json.loads(f.read_text())
+        if (r["arch"], r["shape"]) not in CELLS:
+            continue
+        tag = f.stem.split("__")[3] if len(f.stem.split("__")) > 3 else "baseline"
+        temp_gb = r.get("memory", {}).get("temp_bytes", 0) / 2 ** 30
+        out.append({
+            "cell": f"{r['arch']} × {r['shape']}",
+            "variant": tag,
+            "t_compute_s": round(r["t_compute"], 3),
+            "t_memory_s": round(r["t_memory"], 2),
+            "t_collective_s": round(r["t_collective"], 2),
+            "bound": r["bottleneck"],
+            "roofline_frac": round(
+                r["t_compute"] / max(r["t_compute"], r["t_memory"],
+                                     r["t_collective"]), 4),
+            "temp_GB_per_chip": round(temp_gb, 1),
+        })
+    out.sort(key=lambda x: (x["cell"], x["variant"] != "baseline", x["variant"]))
+    return out
+
+
+def main():
+    rs = rows()
+    cols = list(rs[0].keys()) if rs else []
+    lines = ["| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for r in rs:
+        lines.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    md = "\n".join(lines)
+    Path("experiments/perf_summary.md").write_text(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

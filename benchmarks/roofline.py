@@ -1,0 +1,64 @@
+"""Roofline table assembly from the dry-run artifacts (§Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+per (arch × shape × mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness, and a one-line prescription.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PRESCRIPTION = {
+    "compute": "compute-bound: raise MXU utilisation (bigger tiles, bf16 "
+               "matmuls, fewer small einsums)",
+    "memory": "HBM-bound: cut activation materialisation (flash attention, "
+              "bf16 intermediates, fewer remat round-trips)",
+    "collective": "ICI-bound: reshard to cut gathers (seq-parallel residual, "
+                  "overlap collectives with compute, int8 cross-pod grads)",
+}
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(Path(dryrun_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def roofline_rows(recs: list[dict], mesh: str | None = "16x16",
+                  include_variants: bool = False) -> list[dict]:
+    rows = []
+    for r in recs:
+        if "arch" not in r:
+            continue  # auxiliary records (e.g. ir_pipeline__*) — not cells
+        if mesh and r["mesh"] != mesh:
+            continue
+        if not include_variants and r.get("overrides"):
+            continue  # hillclimb variants live in §Perf, not the baseline table
+        terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": r["t_collective"]}
+        dom = max(terms, key=terms.get)
+        total = max(sum(terms.values()), 1e-30)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": f"{r['t_compute']:.3e}",
+            "t_memory_s": f"{r['t_memory']:.3e}",
+            "t_collective_s": f"{r['t_collective']:.3e}",
+            "bottleneck": dom,
+            "roofline_fraction": round(terms["compute"] / max(terms.values()), 4),
+            "useful_flops_ratio": round(r.get("useful_flops_ratio", 0.0), 4),
+            "fix": PRESCRIPTION[dom],
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def format_csv(rows: list[dict], cols: list[str] | None = None) -> str:
+    if not rows:
+        return "(no dry-run records found — run repro.launch.dryrun first)"
+    cols = cols or [c for c in rows[0] if c != "fix"]
+    out = [",".join(cols)]
+    for r in rows:
+        out.append(",".join(str(r[c]) for c in cols))
+    return "\n".join(out)

@@ -1,0 +1,95 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  RQ1   rank-cutoff optimisation (paper Table 3 top)    [ir_bench]
+  RQ2   fat feature extraction  (paper Table 3 bottom)  [ir_bench]
+  ROOF  roofline terms per (arch x shape x mesh)        [roofline]
+  KERN  kernel micro-benches                            [kernel_bench]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, plus
+the full tables; writes JSON artifacts under experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale robust|small] [--skip-ir]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks import ir_bench, kernel_bench, roofline
+
+OUT = Path("experiments/bench")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="robust", choices=["robust", "small"])
+    ap.add_argument("--skip-ir", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    csv_rows: list[dict] = []
+
+    # --- KERN ---------------------------------------------------------------
+    kern = kernel_bench.bench_fused_scoring() + kernel_bench.bench_topk()
+    csv_rows += kern
+    (OUT / "kernels.json").write_text(json.dumps(kern, indent=1))
+
+    # --- RQ1 / RQ2 ----------------------------------------------------------
+    if not args.skip_ir:
+        if args.scale == "robust":
+            # 50 topics per formulation keeps the unoptimised doc-vectors
+            # baseline tractable on this 1-core host; MRT is per query.
+            env = ir_bench.build_robust_env(n_topics=50)
+        else:
+            env = ir_bench.build_robust_env(n_docs=20000, n_topics=32,
+                                            vocab=40000)
+        print(f"# corpus: {env['index'].n_docs} docs, "
+              f"built in {env['build_s']:.0f}s")
+        rq1 = ir_bench.bench_rq1(env, repeats=args.repeats)
+        rq2 = ir_bench.bench_rq2(env, repeats=args.repeats)
+        cw = ir_bench.clueweb_extrapolation(env, rq1, rq2)
+        (OUT / "rq1.json").write_text(json.dumps(rq1, indent=1))
+        (OUT / "rq2.json").write_text(json.dumps(rq2, indent=1))
+        (OUT / "clueweb_extrapolation.json").write_text(json.dumps(cw, indent=1))
+        print("\n== RQ1: rank-cutoff optimisation (MRT ms/query) ==")
+        for r in rq1:
+            print(r)
+            csv_rows.append({
+                "name": f"rq1_{r['formulation']}_opt",
+                "us_per_call": r["opt_mrt_ms"] * 1000,
+                "derived": f"delta={r['delta_pct']}%,overlap={r['topk_overlap']}"})
+            csv_rows.append({
+                "name": f"rq1_{r['formulation']}_orig",
+                "us_per_call": r["orig_mrt_ms"] * 1000, "derived": ""})
+        print("\n== RQ2: fat feature extraction (MRT ms/query) ==")
+        for r in rq2:
+            print(r)
+            csv_rows.append({
+                "name": f"rq2_{r['formulation']}_opt",
+                "us_per_call": r["opt_mrt_ms"] * 1000,
+                "derived": f"delta={r['delta_pct']}%"})
+            csv_rows.append({
+                "name": f"rq2_{r['formulation']}_orig",
+                "us_per_call": r["orig_mrt_ms"] * 1000, "derived": ""})
+        print("\n== ClueWeb09 extrapolation ==")
+        print(cw)
+
+    # --- ROOF ---------------------------------------------------------------
+    recs = roofline.load_records()
+    for mesh in ["16x16", "2x16x16"]:
+        rows = roofline.roofline_rows(recs, mesh=mesh)
+        if rows:
+            print(f"\n== Roofline ({mesh}, {len(rows)} cells) ==")
+            print(roofline.format_csv(rows))
+            (OUT / f"roofline_{mesh.replace('x','_')}.json").write_text(
+                json.dumps(rows, indent=1))
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for r in csv_rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

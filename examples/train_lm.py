@@ -1,0 +1,78 @@
+"""End-to-end LM training driver (deliverable b): trains a ~100M-param
+decoder-only LM with the full substrate — deterministic data pipeline,
+AdamW + cosine schedule, grad accumulation, async checkpointing, fault-
+tolerant StepGuard.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 10m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+(The 100m preset is the deliverable configuration; 10m runs a quick
+same-code demonstration on slow hosts.)
+"""
+import argparse
+import functools
+import time
+
+import jax
+
+from repro.models import transformer_lm as tlm
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+from repro.train.fault import StepGuard
+
+PRESETS = {
+    # ~110M params: 12L x 768, ff 2048, 32k vocab (tied)
+    "100m": dict(n_layers=12, d_model=768, n_q=12, n_kv=4, d_head=64,
+                 d_ff=2048, vocab=32768, batch=8, seq=256),
+    # ~13M params: fast smoke-scale
+    "10m": dict(n_layers=6, d_model=256, n_q=8, n_kv=4, d_head=32,
+                d_ff=1024, vocab=8192, batch=8, seq=128),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--attn-impl", default="flash")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = tlm.LMConfig(
+        name=f"lm-{args.preset}", n_layers=p["n_layers"], d_model=p["d_model"],
+        n_q=p["n_q"], n_kv=p["n_kv"], d_head=p["d_head"], d_ff=p["d_ff"],
+        vocab=p["vocab"], tie_embeddings=True, attn_impl=args.attn_impl)
+    print(f"{cfg.name}: {cfg.params_total/1e6:.1f}M params")
+
+    params = tlm.init_params(cfg, jax.random.key(0))
+    state = ts.init_state(params)
+    opt_cfg = opt_lib.AdamWConfig(lr=3e-3, warmup_steps=args.steps // 10,
+                                  total_steps=args.steps)
+    step_fn = jax.jit(ts.make_train_step(
+        functools.partial(tlm.loss_fn, cfg), opt_cfg, n_micro=2),
+        donate_argnums=0)
+
+    pipeline = data_lib.DataPipeline(
+        data_lib.lm_batch_fn(cfg.vocab, p["batch"], p["seq"]))
+    guard = StepGuard(args.ckpt_dir, ckpt_every=50)
+
+    hist = []
+    t0 = time.time()
+
+    def logged(state, batch):
+        s, m = step_fn(state, batch)
+        hist.append(float(m["ce"]))
+        if len(hist) % 20 == 0:
+            print(f"step {len(hist):4d}  ce={hist[-1]:.4f}  "
+                  f"({(time.time()-t0)/len(hist)*1000:.0f} ms/step)")
+        return s, m
+
+    state, _, step = guard.run(state, pipeline.iter_from, logged, args.steps)
+    print(f"finished {step} steps: ce {hist[0]:.3f} -> {hist[-1]:.3f} "
+          f"(min {min(hist):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Shared utilities: dtype policy, tree helpers, simple registries."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+#: Default parameter / activation dtype for large-scale runs. fp32 is used for
+#: softmax, layernorm statistics, router logits and the optimizer state.
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    """Cast every floating leaf of ``tree`` to ``dtype``."""
+
+    def _cast(x):
+        if isinstance(x, (jax.Array, np.ndarray)) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree) if hasattr(x, "size"))
+
+
+def tree_param_count(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class Registry:
+    """Minimal name → factory registry (used for archs, weighting models, ...)."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, Any] = {}
+
+    def register(self, name: str, obj: Any = None):
+        if obj is not None:
+            self._entries[name] = obj
+            return obj
+
+        def deco(fn):
+            self._entries[name] = fn
+            return fn
+
+        return deco
+
+    def __getitem__(self, name: str) -> Any:
+        if name not in self._entries:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; known: {sorted(self._entries)}")
+        return self._entries[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def names(self) -> list[str]:
+        return sorted(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def frozen(cls):
+    """Shorthand for a frozen dataclass with keyword-only fields."""
+    return dataclasses.dataclass(frozen=True, kw_only=True)(cls)

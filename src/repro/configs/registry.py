@@ -1,0 +1,77 @@
+"""Architecture registry: ``--arch <id>`` resolution for all 10 assigned archs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+from repro.common import Registry
+
+ARCHS = Registry("architecture")
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class ArchDef:
+    """One selectable architecture with its shape cells.
+
+    ``model_cfg(shape_name)`` may specialise the config per shape (the GNN
+    cells carry their own feature/class counts); ``reduced()`` returns a
+    small same-family config + a host-side batch factory for smoke tests.
+    """
+
+    arch_id: str
+    family: str                                   # "lm" | "gnn" | "recsys"
+    shapes: dict[str, dict]
+    model_cfg: Callable[[str], Any]
+    reduced: Callable[[], tuple[Any, Callable[[], dict]]]
+    train_microbatches: int = 1                    # grad-accum for train cells
+    notes: str = ""
+
+    @property
+    def module(self):
+        mod = {
+            "lm": "repro.models.transformer_lm",
+            "gnn": "repro.models.gnn",
+        }.get(self.family)
+        if mod is None:  # recsys: per-arch module (dcn-v2 -> dcn, ...)
+            mod = f"repro.models.recsys.{self.arch_id.split('-')[0]}"
+        return importlib.import_module(mod)
+
+
+def register(arch: ArchDef) -> ArchDef:
+    ARCHS.register(arch.arch_id, arch)
+    return arch
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    _ensure_loaded()
+    return ARCHS[arch_id]
+
+
+def all_arch_ids() -> list[str]:
+    _ensure_loaded()
+    return ARCHS.names()
+
+
+_LOADED = False
+
+_CONFIG_MODULES = [
+    "repro.configs.qwen2_1_5b",
+    "repro.configs.glm4_9b",
+    "repro.configs.internlm2_1_8b",
+    "repro.configs.llama4_scout_17b_a16e",
+    "repro.configs.olmoe_1b_7b",
+    "repro.configs.gat_cora",
+    "repro.configs.dcn_v2",
+    "repro.configs.dien",
+    "repro.configs.mind",
+    "repro.configs.autoint",
+]
+
+
+def _ensure_loaded():
+    global _LOADED
+    if not _LOADED:
+        for m in _CONFIG_MODULES:
+            importlib.import_module(m)
+        _LOADED = True

@@ -1,0 +1,15 @@
+"""Declarative IR pipeline framework (the paper's contribution, JAX-native).
+
+    from repro.core import *
+    be = JaxBackend(build_index(synthesize_corpus()))
+    pipe = Retrieve("BM25") % 10
+    res = Experiment([pipe], topics, qrels, ["map"], backend=be)
+"""
+from repro.core.compiler import JaxBackend, run_pipeline  # noqa: F401
+from repro.core.data import make_queries  # noqa: F401
+from repro.core.experiment import Experiment, format_table  # noqa: F401
+from repro.core.rewrite import optimize_pipeline  # noqa: F401
+from repro.core.stages import (DenseRerank, Extract, FatRetrieve,  # noqa: F401
+                               LTRRerank, MultiRetrieve, PrunedRetrieve,
+                               Retrieve, RM3Expand, SDMRewrite, StemRewrite)
+from repro.core.transformer import Transformer  # noqa: F401

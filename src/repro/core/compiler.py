@@ -1,0 +1,325 @@
+"""Pipeline compiler + executor (paper §4).
+
+``run_pipeline`` = normalise -> rewrite against the backend's capability
+descriptor -> execute the DAG with hash-consed result caching (identical
+sub-pipelines run once per query set — the paper's grid-search/common-prefix
+caching).  Leaf stages call jitted index ops; queries stream through in
+chunks (the DP axis of a TPU deployment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import cdiv
+from repro.core import data as D
+from repro.core.transformer import (Concat, Cutoff, FeatureUnion, Linear,
+                                    Scale, SetOp, Then, Transformer)
+from repro.index.dense import DenseIndex, build_dense_index
+from repro.index.inverted import BLOCK, InvertedIndex
+
+
+# ---------------------------------------------------------------------------
+# backend
+# ---------------------------------------------------------------------------
+
+class JaxBackend:
+    """Execution backend over the JAX-native index (capability descriptor +
+    chunked-vmap query streaming + query embedding)."""
+
+    #: capabilities consulted by the rewrite rules (paper §4: BMW cutoff on
+    #: Anserini; fat postings on Terrier — our backend supports all)
+    CAPABILITIES = frozenset({"pruned_topk", "fat", "multi_model"})
+
+    def __init__(self, index: InvertedIndex, dense: DenseIndex | None = None,
+                 *, default_k: int = 1000, query_chunk: int = 16,
+                 stop_df_fraction: float = 0.1,
+                 capabilities: frozenset | None = None, seed: int = 0):
+        self.index = index
+        self.default_k = min(default_k, index.n_docs)
+        self.query_chunk = query_chunk
+        self.capabilities = (self.CAPABILITIES if capabilities is None
+                             else frozenset(capabilities))
+        # stopwords are removed at index time (build_index), so the global
+        # max posting-list length is the safe static gather width
+        lens = np.diff(np.asarray(index.term_start))
+        self.max_postings = int(lens.max())
+        self.max_blocks_per_term = self.max_postings // BLOCK
+        self.total_blocks = int(index.doc_ids.shape[0]) // BLOCK
+        self.dense = dense if dense is not None else build_dense_index(index)
+        rng = np.random.default_rng(seed)
+        self._qproj = jnp.asarray(
+            rng.standard_normal((index.vocab, self.dense.dim)).astype(np.float32)
+            / np.sqrt(self.dense.dim))
+        self._jit_cache: dict[Any, Callable] = {}
+
+    # -- chunked vmap over the query axis ---------------------------------
+    def vmap_queries(self, fn, Q, *extra):
+        """vmap ``fn(terms, weights, *extra_i)`` over queries, in chunks.
+        If Q is None, ``fn(*extra_i)`` is mapped over the extra arrays."""
+        args = ((Q["terms"], Q["weights"]) if Q is not None else ()) + extra
+        nq = args[0].shape[0]
+        c = min(self.query_chunk, nq)
+        vf = jax.vmap(fn)
+        outs = []
+        for s in range(0, nq, c):
+            chunk = tuple(a[s:s + c] for a in args)
+            if chunk[0].shape[0] < c:  # pad tail chunk to keep shapes static
+                pad = c - chunk[0].shape[0]
+                chunk = tuple(jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+                              for a in chunk)
+                out = vf(*chunk)
+                out = jax.tree.map(lambda x: x[:-pad], out)
+            else:
+                out = vf(*chunk)
+            outs.append(out)
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *outs)
+
+    def embed_queries(self, Q):
+        t = jnp.maximum(Q["terms"], 0)
+        w = Q["weights"] * (Q["terms"] >= 0)
+        vec = jnp.einsum("qld,ql->qd", self._qproj[t], w)
+        return vec / jnp.maximum(
+            jnp.linalg.norm(vec, axis=-1, keepdims=True), 1e-6)
+
+    def label_results(self, Q, R, qrels: dict[int, dict[int, int]]):
+        """Join a result list with qrels -> dense grade matrix [NQ, K]."""
+        qids = np.asarray(Q["qid"])
+        docids = np.asarray(R["docids"])
+        labels = np.zeros(docids.shape, np.float32)
+        for i, q in enumerate(qids):
+            g = qrels.get(int(q), {})
+            if g:
+                labels[i] = [g.get(int(d), 0) if d >= 0 else 0 for d in docids[i]]
+        return jnp.asarray(labels)
+
+
+# ---------------------------------------------------------------------------
+# combinator semantics (paper Table 2 relational definitions)
+# ---------------------------------------------------------------------------
+
+def _aggregate_rows(docs, scores, k_out):
+    """Per-query CombSUM: sum scores of duplicate docids, top-k_out."""
+    order = jnp.argsort(docs)
+    d, s = docs[order], scores[order]
+    seg = jnp.cumsum(jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), (d[1:] != d[:-1]).astype(jnp.int32)]))
+    agg = jax.ops.segment_sum(s, seg, num_segments=d.shape[0])
+    first = jnp.concatenate([jnp.ones(1, bool), d[1:] != d[:-1]])
+    rep = jnp.where(first & (d >= 0), agg[seg], -jnp.inf)
+    top_s, idx = jax.lax.top_k(rep, k_out)
+    return jnp.where(jnp.isfinite(top_s), d[idx], -1).astype(jnp.int32), \
+        jnp.where(jnp.isfinite(top_s), top_s, -jnp.inf)
+
+
+@jax.jit
+def _combine_linear(all_docs, all_scores, weights):
+    """all_docs [NQ, C, K]; weights [C] -> CombSUM over the union."""
+    NQ, C, K = all_docs.shape
+    w = weights[None, :, None]
+    s = jnp.where(all_docs >= 0, all_scores * w, 0.0)
+    flat_d = all_docs.reshape(NQ, C * K)
+    flat_s = s.reshape(NQ, C * K)
+    return jax.vmap(lambda d, sc: _aggregate_rows(d, sc, K))(flat_d, flat_s)
+
+
+@jax.jit
+def _setop_union(d1, s1, d2, s2):
+    """Union of two result lists; scores are ⊥ (=0, to be re-ranked)."""
+    docs = jnp.concatenate([d1, d2], 1)
+    order = jnp.argsort(docs, 1)
+    d = jnp.take_along_axis(docs, order, 1)
+    first = jnp.concatenate([jnp.ones_like(d[:, :1], bool),
+                             d[:, 1:] != d[:, :-1]], 1) & (d >= 0)
+    key = jnp.where(first, d, jnp.iinfo(jnp.int32).max)
+    order2 = jnp.argsort(key, 1)
+    d = jnp.where(jnp.take_along_axis(first, order2, 1),
+                  jnp.take_along_axis(d, order2, 1), -1)
+    return d, jnp.where(d >= 0, 0.0, -jnp.inf)
+
+
+@jax.jit
+def _setop_intersect(d1, s1, d2, s2):
+    member = ((d1[:, :, None] == d2[:, None, :]) & (d1 >= 0)[:, :, None]).any(2)
+    key = jnp.where(member, d1, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, 1)
+    d = jnp.where(jnp.take_along_axis(member, order, 1),
+                  jnp.take_along_axis(d1, order, 1), -1)
+    return d, jnp.where(d >= 0, 0.0, -jnp.inf)
+
+
+@jax.jit
+def _concat_rankings(d1, s1, d2, s2, eps=1e-3):
+    """Paper ^: append R2\\R1 below R1 with shifted scores."""
+    dup = ((d2[:, :, None] == d1[:, None, :]) & (d2 >= 0)[:, :, None]).any(2)
+    v1 = d1 >= 0
+    v2 = (d2 >= 0) & ~dup
+    min1 = jnp.min(jnp.where(v1, s1, jnp.inf), 1, keepdims=True)
+    max2 = jnp.max(jnp.where(v2, s2, -jnp.inf), 1, keepdims=True)
+    min1 = jnp.where(jnp.isfinite(min1), min1, 0.0)
+    max2 = jnp.where(jnp.isfinite(max2), max2, 0.0)
+    s2n = s2 - max2 + min1 - eps
+    docs = jnp.concatenate([jnp.where(v1, d1, -1), jnp.where(v2, d2, -1)], 1)
+    scores = jnp.concatenate([jnp.where(v1, s1, -jnp.inf),
+                              jnp.where(v2, s2n, -jnp.inf)], 1)
+    order = jnp.argsort(-scores, 1)
+    return (jnp.take_along_axis(docs, order, 1),
+            jnp.take_along_axis(scores, order, 1))
+
+
+def _feature_columns(R):
+    if "features" in R:
+        return R["features"]
+    return R["scores"][..., None]
+
+
+@jax.jit
+def _align_features(base_docs, child_docs, child_feats):
+    """Align child feature rows onto base docids ((qid,docid) join)."""
+    eq = (base_docs[:, :, None] == child_docs[:, None, :]) & \
+        (base_docs >= 0)[:, :, None]
+    aligned = jnp.einsum("qbc,qcf->qbf", eq.astype(child_feats.dtype),
+                         child_feats)
+    return aligned
+
+
+# node-kind -> executor for combinators
+def _exec_then(node, ctx, Q, R):
+    for child in node.children:
+        Q, R = _execute(child, ctx, Q, R)
+    return Q, R
+
+
+def _exec_linear(node, ctx, Q, R):
+    outs = [_execute(c, ctx, Q, R)[1] for c in node.children]
+    K = max(o["docids"].shape[1] for o in outs)
+    pad = lambda o: jnp.pad(o["docids"], ((0, 0), (0, K - o["docids"].shape[1])),
+                            constant_values=-1)
+    pads = lambda o: jnp.pad(o["scores"], ((0, 0), (0, K - o["scores"].shape[1])),
+                             constant_values=-jnp.inf)
+    docs = jnp.stack([pad(o) for o in outs], 1)
+    scores = jnp.stack([pads(o) for o in outs], 1)
+    w = jnp.asarray(node.params["weights"], jnp.float32)
+    d, s = _combine_linear(docs, scores, w)
+    return Q, {"qid": Q["qid"], "docids": d, "scores": s}
+
+
+def _exec_scale(node, ctx, Q, R):
+    Q, R1 = _execute(node.children[0], ctx, Q, R)
+    a = node.params["alpha"]
+    return Q, {**R1, "scores": jnp.where(R1["docids"] >= 0,
+                                         R1["scores"] * a, -jnp.inf)}
+
+
+def _exec_cutoff(node, ctx, Q, R):
+    Q, R1 = _execute(node.children[0], ctx, Q, R)
+    k = node.params["k"]
+    out = {**R1, "docids": R1["docids"][:, :k], "scores": R1["scores"][:, :k]}
+    if "features" in R1:
+        out["features"] = R1["features"][:, :k]
+    return Q, out
+
+
+def _exec_setop(node, ctx, Q, R):
+    _, R1 = _execute(node.children[0], ctx, Q, R)
+    _, R2 = _execute(node.children[1], ctx, Q, R)
+    fn = _setop_union if node.params["op"] == "union" else _setop_intersect
+    d, s = fn(R1["docids"], R1["scores"], R2["docids"], R2["scores"])
+    return Q, {"qid": Q["qid"], "docids": d, "scores": s}
+
+
+def _exec_concat(node, ctx, Q, R):
+    _, R1 = _execute(node.children[0], ctx, Q, R)
+    _, R2 = _execute(node.children[1], ctx, Q, R)
+    d, s = _concat_rankings(R1["docids"], R1["scores"],
+                            R2["docids"], R2["scores"])
+    return Q, {"qid": Q["qid"], "docids": d, "scores": s}
+
+
+def _exec_feature_union(node, ctx, Q, R):
+    outs = [_execute(c, ctx, Q, R)[1] for c in node.children]
+    base = outs[0]
+    cols = [_feature_columns(base)]
+    for o in outs[1:]:
+        cols.append(_align_features(base["docids"], o["docids"],
+                                    _feature_columns(o)))
+    feats = jnp.concatenate(cols, -1)
+    return Q, {**base, "features": feats}
+
+
+_COMBINATORS = {
+    "then": _exec_then, "linear": _exec_linear, "scale": _exec_scale,
+    "cutoff": _exec_cutoff, "setop": _exec_setop, "concat": _exec_concat,
+    "feature_union": _exec_feature_union,
+}
+
+
+# ---------------------------------------------------------------------------
+# execution engine with hash-consed result caching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Context:
+    backend: JaxBackend
+    memo: dict = dataclasses.field(default_factory=dict)
+
+    def input_token(self, Q, R):
+        ids = tuple(id(v) for v in jax.tree.leaves((Q, R)))
+        return hash(ids)
+
+
+def _execute(node: Transformer, ctx: Context, Q, R):
+    token = (node.key(), ctx.input_token(Q, R))
+    if token in ctx.memo:
+        return ctx.memo[token]
+    fn = _COMBINATORS.get(node.kind)
+    if fn is not None:
+        out = fn(node, ctx, Q, R)
+    else:
+        out = node.execute(ctx, Q, R)
+    ctx.memo[token] = out
+    return out
+
+
+def run_pipeline(node: Transformer, Q, R=None, *, backend: JaxBackend,
+                 optimize: bool = True, ctx: Context | None = None):
+    from repro.core.rewrite import optimize_pipeline
+    if optimize:
+        node = optimize_pipeline(node, backend)
+    ctx = ctx or Context(backend)
+    Q2, R2 = _execute(node, ctx, Q, R)
+    return R2 if R2 is not None else Q2
+
+
+def fit_pipeline(root: Transformer, Q_train, qrels_train, Q_valid,
+                 qrels_valid, *, backend: JaxBackend):
+    """Depth-first fit: run the pipeline; each stateful node receives the
+    (Q, R) flowing into it plus qrels (paper eq. 9 semantics)."""
+    ctx = Context(backend)
+
+    def walk(node, Q, R, Qv, Rv):
+        if node.kind == "then":
+            for child in node.children:
+                Q, R, Qv, Rv = walk(child, Q, R, Qv, Rv)
+            return Q, R, Qv, Rv
+        # fit children first (they feed this node)
+        for child in node.children:
+            walk(child, Q, R, Qv, Rv)
+        Qo, Ro = _execute_prefit(node, ctx, Q, R)
+        Qvo, Rvo = (None, None)
+        if Qv is not None:
+            Qvo, Rvo = _execute_prefit(node, ctx, Qv, Rv)
+        return Qo, Ro, Qvo, Rvo
+
+    def _execute_prefit(node, ctx, Q, R):
+        if node.stateful:
+            # must fit BEFORE executing (execute needs trained state)
+            node._fit_local(ctx, Q, R, qrels_train, None, None, qrels_valid)
+        return _execute(node, ctx, Q, R)
+
+    walk(root, Q_train, None, Q_valid, None)
+    return root

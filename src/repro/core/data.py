@@ -1,0 +1,59 @@
+"""The IR data model (paper §3.1): queries Q, result lists R, qrels RA.
+
+Q and R are relations realised as dict-of-array pytrees so that entire
+pipelines lower into single XLA programs and shard over the query axis (DP)
+and index axis (MP):
+
+  Q:  {"qid" [NQ], "terms" [NQ, MAXQ] (-1 padded), "weights" [NQ, MAXQ]}
+  R:  {"qid" [NQ], "docids" [NQ, K] (-1 padded), "scores" [NQ, K],
+       optional "features" [NQ, K, F]}
+
+Primary keys: q.id for Q; (q.id, d.id) for R — mirrored from the paper's
+object-relational model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+MAXQ = 48   # padded query length (original + expansion terms)
+
+Queries = dict[str, Any]
+Results = dict[str, Any]
+
+
+def make_queries(terms: np.ndarray, weights: np.ndarray | None = None,
+                 qids: np.ndarray | None = None, maxq: int = MAXQ) -> Queries:
+    terms = np.asarray(terms, np.int32)
+    nq, L = terms.shape
+    if L < maxq:
+        terms = np.pad(terms, ((0, 0), (0, maxq - L)), constant_values=-1)
+        if weights is not None:
+            weights = np.pad(np.asarray(weights, np.float32),
+                             ((0, 0), (0, maxq - L)))
+    if weights is None:
+        weights = (terms >= 0).astype(np.float32)
+    if qids is None:
+        qids = np.arange(nq, dtype=np.int32)
+    return {"qid": jnp.asarray(qids), "terms": jnp.asarray(terms),
+            "weights": jnp.asarray(weights, jnp.float32)}
+
+
+def empty_results(nq: int, k: int) -> Results:
+    return {"qid": jnp.arange(nq, dtype=jnp.int32),
+            "docids": jnp.full((nq, k), -1, jnp.int32),
+            "scores": jnp.full((nq, k), -jnp.inf, jnp.float32)}
+
+
+def n_queries(Q: Queries) -> int:
+    return int(Q["qid"].shape[0])
+
+
+def results_depth(R: Results) -> int:
+    return int(R["docids"].shape[1])
+
+
+def to_host(R: Results) -> dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in R.items()}

@@ -1,0 +1,61 @@
+"""The Experiment abstraction (paper §3.4).
+
+``Experiment(pipelines, topics, qrels, metrics)`` applies each pipeline to a
+common query set and evaluates the results side-by-side, sharing a result
+cache so common pipeline prefixes execute once (the paper's grid-search
+caching).  Optionally times each pipeline (MRT — mean response time), which
+is how the RQ1/RQ2 tables are produced.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+
+from repro.core import measures as M
+from repro.core.compiler import Context, JaxBackend, run_pipeline
+from repro.core.rewrite import optimize_pipeline
+from repro.core.transformer import Transformer
+
+
+def Experiment(pipelines: Sequence[Transformer], topics, qrels,
+               metrics: Sequence[str] = ("map", "ndcg_cut_10"),
+               *, backend: JaxBackend, names: Sequence[str] | None = None,
+               optimize: bool = True, measure_time: bool = False,
+               share_cache: bool = True) -> dict:
+    """Returns {"table": [row dicts], "results": [R per pipeline]}."""
+    names = list(names) if names else [repr(p)[:60] for p in pipelines]
+    ctx = Context(backend) if share_cache else None
+    rows, results = [], []
+    for name, pipe in zip(names, pipelines):
+        node = optimize_pipeline(pipe, backend) if optimize else pipe
+        t0 = time.perf_counter()
+        R = run_pipeline(node, topics, backend=backend, optimize=False,
+                         ctx=ctx if share_cache else Context(backend))
+        jax.block_until_ready(R["scores"])
+        elapsed = time.perf_counter() - t0
+        row = {"name": name, **M.compute_measures(R, qrels, list(metrics))}
+        if measure_time:
+            nq = int(R["qid"].shape[0])
+            row["mrt_ms"] = 1000.0 * elapsed / nq
+        rows.append(row)
+        results.append(R)
+    return {"table": rows, "results": results}
+
+
+def format_table(rows: list[dict]) -> str:
+    if not rows:
+        return "(empty)"
+    cols = list(rows[0].keys())
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    lines = ["  ".join(c.ljust(widths[c]) for c in cols)]
+    for r in rows:
+        lines.append("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+    return "\n".join(lines)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)

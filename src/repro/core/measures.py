@@ -1,0 +1,84 @@
+"""IR evaluation measures (trec_eval semantics) — metric math in JAX.
+
+The (qid, docid) -> grade join happens host-side (as trec_eval does); the
+measure computations are vectorised jnp over the dense [NQ, K] grade matrix.
+Supported: map, ndcg_cut_K, P_K, recip_rank, recall_K, num_rel_ret.
+"""
+from __future__ import annotations
+
+import re
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def label_matrix(R, qrels: dict[int, dict[int, int]]) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (grades [NQ, K], n_rel [NQ])."""
+    qids = np.asarray(R["qid"])
+    docids = np.asarray(R["docids"])
+    grades = np.zeros(docids.shape, np.float32)
+    n_rel = np.zeros(len(qids), np.float32)
+    for i, q in enumerate(qids):
+        g = qrels.get(int(q), {})
+        n_rel[i] = sum(1 for v in g.values() if v > 0)
+        if g:
+            row = docids[i]
+            grades[i] = [g.get(int(d), 0) if d >= 0 else 0 for d in row]
+    return grades, n_rel
+
+
+def average_precision(grades, n_rel):
+    rel = (grades > 0).astype(jnp.float32)
+    cum = jnp.cumsum(rel, axis=1)
+    ranks = jnp.arange(1, grades.shape[1] + 1, dtype=jnp.float32)
+    prec = cum / ranks
+    ap = jnp.sum(prec * rel, axis=1) / jnp.maximum(n_rel, 1.0)
+    return jnp.where(n_rel > 0, ap, 0.0)
+
+
+def ndcg_at(grades, n_rel, k: int):
+    g = grades[:, :k]
+    discounts = 1.0 / jnp.log2(jnp.arange(2, k + 2, dtype=jnp.float32))
+    dcg = jnp.sum((2.0 ** g - 1.0) * discounts, axis=1)
+    ideal = jnp.sort(grades, axis=1)[:, ::-1][:, :k]
+    idcg = jnp.sum((2.0 ** ideal - 1.0) * discounts, axis=1)
+    return jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-9), 0.0)
+
+
+def precision_at(grades, n_rel, k: int):
+    return jnp.mean((grades[:, :k] > 0).astype(jnp.float32), axis=1)
+
+
+def recip_rank(grades, n_rel):
+    rel = grades > 0
+    first = jnp.argmax(rel, axis=1)
+    has = jnp.any(rel, axis=1)
+    return jnp.where(has, 1.0 / (first + 1.0), 0.0)
+
+
+def recall_at(grades, n_rel, k: int):
+    hits = jnp.sum((grades[:, :k] > 0).astype(jnp.float32), axis=1)
+    return jnp.where(n_rel > 0, hits / jnp.maximum(n_rel, 1.0), 0.0)
+
+
+def compute_measures(R, qrels, metrics: list[str]) -> dict[str, float]:
+    grades_np, n_rel_np = label_matrix(R, qrels)
+    grades, n_rel = jnp.asarray(grades_np), jnp.asarray(n_rel_np)
+    out = {}
+    for m in metrics:
+        if m == "map":
+            v = average_precision(grades, n_rel)
+        elif m == "recip_rank":
+            v = recip_rank(grades, n_rel)
+        elif m == "num_rel_ret":
+            v = jnp.sum(grades > 0, axis=1).astype(jnp.float32)
+        elif (mm := re.fullmatch(r"ndcg_cut_(\d+)", m)):
+            v = ndcg_at(grades, n_rel, int(mm.group(1)))
+        elif (mm := re.fullmatch(r"P_(\d+)", m)):
+            v = precision_at(grades, n_rel, int(mm.group(1)))
+        elif (mm := re.fullmatch(r"recall_(\d+)", m)):
+            v = recall_at(grades, n_rel, int(mm.group(1)))
+        else:
+            raise ValueError(f"unknown metric {m}")
+        out[m] = float(jnp.mean(v))
+    return out

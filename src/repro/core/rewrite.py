@@ -1,0 +1,183 @@
+"""Graph rewriting: semantics-preserving pipeline optimisation (paper §4).
+
+The rewriter applies *equivalence rules* bottom-up to a fixpoint.  Rules
+consult the backend capability descriptor, mirroring how PyTerrier compiles
+``Retrieve % 10`` into an Anserini BlockMaxWAND call and
+``Retrieve >> (Extract ** Extract)`` into a Terrier fat-postings pass.
+Associativity/commutativity is handled by the canonical variadic node forms
+(see transformer.py) — structural matching replaces MatchPy.
+
+Rules (★ = beyond-paper):
+  cutoff_merge       %K1 %K2                    -> %min(K1,K2)
+  cutoff_into_then   (A >> B) % K               -> A >> (B % K)
+  cutoff_scale_swap  (α·T) % K                  -> α·(T % K)
+  cutoff_pushdown    Retrieve % K               -> PrunedRetrieve(k=K)   [RQ1]
+  fat_fusion         Retrieve >> (Extract ** …) -> FatRetrieve           [RQ2]
+  extract_fusion     Retrieve >> Extract        -> FatRetrieve(1 feat)
+  linear_fusion ★    Σ wᵢ·Retrieve(mᵢ)          -> MultiRetrieve (1 pass)
+  scale_fold         α(βT) -> (αβ)T ; weights folded into Linear
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core import stages as S
+from repro.core.transformer import (Concat, Cutoff, FeatureUnion, Linear,
+                                    Scale, SetOp, Then, Transformer)
+
+Rule = Callable[[Transformer, "JaxBackend"], Transformer | None]
+RULES: list[tuple[str, Rule]] = []
+
+
+def rule(name: str):
+    def deco(fn):
+        RULES.append((name, fn))
+        return fn
+    return deco
+
+
+def _clone(node: Transformer, children) -> Transformer:
+    new = object.__new__(type(node))
+    new.__dict__.update(node.__dict__)
+    new.children = tuple(children)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+@rule("cutoff_merge")
+def cutoff_merge(node, backend):
+    if isinstance(node, Cutoff) and isinstance(node.children[0], Cutoff):
+        inner = node.children[0]
+        k = min(node.params["k"], inner.params["k"])
+        return Cutoff(children=[inner.children[0]], k=k)
+    return None
+
+
+@rule("cutoff_into_then")
+def cutoff_into_then(node, backend):
+    if isinstance(node, Cutoff) and isinstance(node.children[0], Then):
+        then = node.children[0]
+        last = Cutoff(children=[then.children[-1]], k=node.params["k"])
+        return Then(children=[*then.children[:-1], last])
+    return None
+
+
+@rule("cutoff_scale_swap")
+def cutoff_scale_swap(node, backend):
+    if isinstance(node, Cutoff) and isinstance(node.children[0], Scale):
+        sc = node.children[0]
+        if sc.params["alpha"] > 0:
+            inner = Cutoff(children=[sc.children[0]], k=node.params["k"])
+            return Scale(children=[inner], alpha=sc.params["alpha"])
+    return None
+
+
+@rule("cutoff_pushdown")
+def cutoff_pushdown(node, backend):
+    """Retrieve % K -> PrunedRetrieve(K): the RQ1 dynamic-pruning rewrite."""
+    if "pruned_topk" not in backend.capabilities:
+        return None
+    if isinstance(node, Cutoff) and isinstance(node.children[0], S.Retrieve):
+        ret = node.children[0]
+        K = node.params["k"]
+        if ret.params["k"] is None or ret.params["k"] >= K:
+            return S.PrunedRetrieve(model=ret.params["model"], k=K)
+    return None
+
+
+def _as_extract_models(children) -> tuple[str, ...] | None:
+    models = []
+    for c in children:
+        if isinstance(c, S.Extract):
+            models.append(c.params["model"])
+        else:
+            return None
+    return tuple(models)
+
+
+@rule("fat_fusion")
+def fat_fusion(node, backend):
+    """Retrieve >> (Extract ** ... ** Extract) -> FatRetrieve: RQ2."""
+    if "fat" not in backend.capabilities or not isinstance(node, Then):
+        return None
+    kids = list(node.children)
+    for i in range(len(kids) - 1):
+        a, b = kids[i], kids[i + 1]
+        if not isinstance(a, S.Retrieve):
+            continue
+        if isinstance(b, FeatureUnion):
+            models = _as_extract_models(b.children)
+        elif isinstance(b, S.Extract):
+            models = (b.params["model"],)
+        else:
+            continue
+        if models is None:
+            continue
+        fat = S.FatRetrieve(model=a.params["model"], features=models,
+                            k=a.params["k"])
+        new_kids = kids[:i] + [fat] + kids[i + 2:]
+        return new_kids[0] if len(new_kids) == 1 else Then(children=new_kids)
+    return None
+
+
+@rule("linear_fusion")
+def linear_fusion(node, backend):
+    """★ Σ wᵢ·Retrieve(mᵢ, k) on one index -> MultiRetrieve: one postings
+    pass instead of N (beyond-paper rewrite enabled by score_all)."""
+    if "multi_model" not in backend.capabilities or not isinstance(node, Linear):
+        return None
+    ks = set()
+    models = []
+    for c in node.children:
+        if not isinstance(c, S.Retrieve):
+            return None
+        ks.add(c.params["k"])
+        models.append(c.params["model"])
+    if len(ks) != 1 or len(models) < 2:
+        return None
+    return S.MultiRetrieve(models=tuple(models),
+                           weights=tuple(node.params["weights"]),
+                           k=ks.pop())
+
+
+@rule("scale_fold")
+def scale_fold(node, backend):
+    if isinstance(node, Scale):
+        inner = node.children[0]
+        a = node.params["alpha"]
+        if a == 1.0:
+            return inner
+        if isinstance(inner, (Scale, Linear)):
+            return Scale.of(a, inner)   # re-canonicalise
+    return None
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def optimize_pipeline(root: Transformer, backend, *, max_iters: int = 20,
+                      trace: list | None = None) -> Transformer:
+    """Bottom-up rewrite to fixpoint."""
+
+    def walk(node: Transformer) -> Transformer:
+        new_children = [walk(c) for c in node.children]
+        if any(n is not o for n, o in zip(new_children, node.children)):
+            node = _clone(node, new_children)
+        for name, r in RULES:
+            out = r(node, backend)
+            if out is not None and out.key() != node.key():
+                if trace is not None:
+                    trace.append((name, node, out))
+                return walk(out)
+        return node
+
+    for _ in range(max_iters):
+        new = walk(root)
+        if new.key() == root.key():
+            return new
+        root = new
+    return root

@@ -1,0 +1,299 @@
+"""Concrete IR transformers (paper Table 1) over the JAX backend.
+
+Leaf stages close over *static* config only; array state (learned weights)
+lives in ``self.state`` and is trained through ``fit()``.  Execution is
+vmapped over the query axis and chunked by the backend (the DP dimension of
+the multi-pod deployment).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import data as D
+from repro.core.transformer import Transformer
+from repro.index import retrieve as RT
+from repro.index import scoring
+from repro.index.inverted import BLOCK
+
+
+# ---------------------------------------------------------------------------
+# retrieval stages
+# ---------------------------------------------------------------------------
+
+class Retrieve(Transformer):
+    """Exhaustive top-k retrieval under one weighting model (Q -> R)."""
+    kind = "retrieve"
+
+    def __init__(self, model: str = "BM25", k: int | None = None):
+        super().__init__(model=model, k=k)
+
+    def execute(self, ctx, Q, R):
+        k = self.params["k"] or ctx.backend.default_k
+        model = self.params["model"]
+
+        def one(terms, weights):
+            return RT.retrieve_topk(ctx.backend.index, terms, weights,
+                                    model=model, k=k,
+                                    max_postings=ctx.backend.max_postings)
+
+        docs, scores = ctx.backend.vmap_queries(one, Q)
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
+class PrunedRetrieve(Transformer):
+    """Block-max pruned top-k — the RQ1-optimised Retrieve (created by the
+    CutoffPushdown rewrite; can also be used directly)."""
+    kind = "pruned_retrieve"
+
+    def __init__(self, model: str = "BM25", k: int = 10, n_terms: int = 8):
+        super().__init__(model=model, k=k, n_terms=n_terms)
+
+    def execute(self, ctx, Q, R):
+        k = self.params["k"]
+        model = self.params["model"]
+        budget = RT.block_budget(k, self.params["n_terms"])
+        budget = min(budget, ctx.backend.total_blocks)
+        mbt = ctx.backend.max_blocks_per_term
+
+        def one(terms, weights):
+            return RT.retrieve_pruned(ctx.backend.index, terms, weights,
+                                      model=model, k=k, n_blocks=budget,
+                                      max_blocks_per_term=mbt)
+
+        docs, scores = ctx.backend.vmap_queries(one, Q)
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
+class MultiRetrieve(Transformer):
+    """Single-pass weighted multi-model retrieval (created by the
+    LinearFusion rewrite — beyond-paper optimisation)."""
+    kind = "multi_retrieve"
+
+    def __init__(self, models: tuple[str, ...], weights: tuple[float, ...],
+                 k: int | None = None):
+        super().__init__(models=tuple(models), weights=tuple(weights), k=k)
+
+    def execute(self, ctx, Q, R):
+        k = self.params["k"] or ctx.backend.default_k
+        models = self.params["models"]
+        mw = jnp.asarray(self.params["weights"], jnp.float32)
+
+        def one(terms, weights):
+            return RT.retrieve_multi(ctx.backend.index, terms, weights, mw,
+                                     models=models, k=k,
+                                     max_postings=ctx.backend.max_postings)
+
+        docs, scores = ctx.backend.vmap_queries(one, Q)
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
+class FatRetrieve(Transformer):
+    """Single-pass retrieval + multi-model feature extraction (fat postings —
+    the RQ2-optimised form of Retrieve >> (Extract ** ... ** Extract))."""
+    kind = "fat_retrieve"
+
+    def __init__(self, model: str = "BM25",
+                 features: tuple[str, ...] = (), k: int | None = None):
+        super().__init__(model=model, features=tuple(features), k=k)
+
+    def execute(self, ctx, Q, R):
+        k = self.params["k"] or ctx.backend.default_k
+
+        def one(terms, weights):
+            return RT.retrieve_fat(
+                ctx.backend.index, terms, weights,
+                rank_model=self.params["model"],
+                feature_models=self.params["features"], k=k,
+                max_postings=ctx.backend.max_postings)
+
+        docs, scores, feats = ctx.backend.vmap_queries(one, Q)
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores,
+                   "features": feats}
+
+
+# ---------------------------------------------------------------------------
+# query rewriting / expansion
+# ---------------------------------------------------------------------------
+
+class SDMRewrite(Transformer):
+    """Sequential-dependence-style rewrite (Q -> Q).
+
+    Positions are not stored in the index, so the proximity operators (#1,
+    #uw8) are adapted as weight redistribution over the original terms
+    (unigram 0.85 emphasis) plus duplicated high-weight lead terms — a
+    rank-affecting, semantics-documented analogue (DESIGN.md §2).
+    """
+    kind = "sdm_rewrite"
+
+    def __init__(self, unigram: float = 0.85):
+        super().__init__(unigram=unigram)
+
+    def execute(self, ctx, Q, R):
+        w = Q["weights"]
+        u = self.params["unigram"]
+        n = jnp.maximum(jnp.sum(Q["terms"] >= 0, 1, keepdims=True), 1)
+        lead = (jnp.arange(w.shape[1])[None, :] < jnp.maximum(n // 2, 1))
+        w2 = w * (u + (1 - u) * 2 * lead)
+        return {**Q, "weights": w2}, R
+
+
+class StemRewrite(Transformer):
+    """Context-sensitive-stemming analogue: adds a same-frequency-band
+    variant term (synthetic stem class neighbour) at reduced weight."""
+    kind = "stem_rewrite"
+
+    def __init__(self, weight: float = 0.4):
+        super().__init__(weight=weight)
+
+    def execute(self, ctx, Q, R):
+        t, w = Q["terms"], Q["weights"]
+        n = jnp.sum(t >= 0, 1, keepdims=True)
+        L = t.shape[1]
+        variant = jnp.where(t >= 0, t ^ 1, -1)          # stem-class sibling
+        idx = jnp.arange(L)[None, :]
+        shifted = idx - n
+        take = (shifted >= 0) & (shifted < n)
+        sh = jnp.clip(shifted, 0, L - 1)
+        t2 = jnp.where(t >= 0, t,
+                       jnp.where(take, jnp.take_along_axis(variant, sh, 1), -1))
+        w2 = jnp.where(t >= 0, w,
+                       jnp.where(take,
+                                 jnp.take_along_axis(w, sh, 1) * self.params["weight"],
+                                 0.0))
+        return {**Q, "terms": t2, "weights": w2}, R
+
+
+class RM3Expand(Transformer):
+    """Pseudo-relevance-feedback expansion (Q × R -> Q'), paper eq. (5)."""
+    kind = "rm3"
+
+    def __init__(self, fb_terms: int = 10, fb_docs: int = 10, alpha: float = 0.5):
+        super().__init__(fb_terms=fb_terms, fb_docs=fb_docs, alpha=alpha)
+
+    def execute(self, ctx, Q, R):
+        assert R is not None, "RM3 needs retrieved results (use after Retrieve)"
+        fb_docs = self.params["fb_docs"]
+
+        def one(terms, weights, docids, scores):
+            return RT.rm3_expand(ctx.backend.index, terms, weights,
+                                 docids[:fb_docs], scores[:fb_docs],
+                                 fb_terms=self.params["fb_terms"],
+                                 alpha=self.params["alpha"],
+                                 max_fwd=ctx.backend.index.max_fwd_len)
+
+        t2, w2 = ctx.backend.vmap_queries(one, Q, R["docids"], R["scores"])
+        return {**Q, "terms": t2, "weights": w2}, R
+
+
+# ---------------------------------------------------------------------------
+# feature extraction / re-ranking
+# ---------------------------------------------------------------------------
+
+class Extract(Transformer):
+    """Per-feature doc-vectors pass (Q × R -> R+feature) — the unoptimised
+    feature extractor the RQ2 rewrite replaces."""
+    kind = "extract"
+
+    def __init__(self, model: str):
+        super().__init__(model=model)
+
+    def execute(self, ctx, Q, R):
+        def one(terms, weights, docids):
+            return RT.extract_feature_docvectors(
+                ctx.backend.index, terms, weights, docids,
+                model=self.params["model"], max_fwd=ctx.backend.index.max_fwd_len)
+
+        f = ctx.backend.vmap_queries(one, Q, R["docids"])      # [NQ, K]
+        feats = R.get("features")
+        f = f[..., None]
+        feats = f if feats is None else jnp.concatenate([feats, f], -1)
+        return Q, {**R, "features": feats}
+
+
+def _sort_by_scores(R, new_scores):
+    order = jnp.argsort(-new_scores, axis=1)
+    out = {**R, "docids": jnp.take_along_axis(R["docids"], order, 1),
+           "scores": jnp.take_along_axis(new_scores, order, 1)}
+    if "features" in R:
+        out["features"] = jnp.take_along_axis(R["features"], order[..., None], 1)
+    return out
+
+
+class LTRRerank(Transformer):
+    """Learning-to-rank stage over feature columns (LambdaMART slot).
+
+    A pairwise-logistic MLP trained with the framework optimizer — the
+    xgBoost stage of Listing 1 realised JAX-natively.
+    """
+    kind = "ltr"
+    stateful = True
+
+    def __init__(self, n_features: int, hidden: int = 32, lr: float = 0.05,
+                 epochs: int = 30, seed: int = 0):
+        super().__init__(n_features=n_features, hidden=hidden, lr=lr,
+                         epochs=epochs, seed=seed)
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        F, H = n_features, hidden
+        self.state = {
+            "w1": jax.random.normal(k1, (F, H), jnp.float32) / np.sqrt(F),
+            "b1": jnp.zeros((H,), jnp.float32),
+            "w2": jax.random.normal(k2, (H, 1), jnp.float32) / np.sqrt(H),
+        }
+
+    def _score(self, state, feats):
+        h = jnp.tanh(feats @ state["w1"] + state["b1"])
+        return (h @ state["w2"])[..., 0]
+
+    def execute(self, ctx, Q, R):
+        assert "features" in R, "LTRRerank needs feature columns (use ** / Extract)"
+        s = self._score(self.state, R["features"])
+        s = jnp.where(R["docids"] >= 0, s, -jnp.inf)
+        return Q, _sort_by_scores(R, s)
+
+    def _fit_local(self, ctx, Q, R, qrels, Q_valid, R_valid, qrels_valid):
+        feats = R["features"]
+        labels = ctx.backend.label_results(Q, R, qrels)      # [NQ, K] float
+        valid = (R["docids"] >= 0)
+
+        def loss_fn(state):
+            s = self._score(state, feats)
+            # pairwise logistic over intra-query pairs
+            ds = s[:, :, None] - s[:, None, :]
+            dl = labels[:, :, None] - labels[:, None, :]
+            pair = (dl > 0) & valid[:, :, None] & valid[:, None, :]
+            losses = jnp.logaddexp(0.0, -ds) * pair
+            return jnp.sum(losses) / jnp.maximum(jnp.sum(pair), 1.0)
+
+        lr = self.params["lr"]
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        state = self.state
+        for _ in range(self.params["epochs"]):
+            _, g = grad_fn(state)
+            state = jax.tree.map(lambda p, gg: p - lr * gg, state, g)
+        self.state = state
+        self.version += 1
+
+
+class DenseRerank(Transformer):
+    """Dense (embedding) re-scoring of the candidate set — the neural
+    re-ranker slot (CEDR/BERT in Listing 1), backed by the dense index."""
+    kind = "dense_rerank"
+
+    def __init__(self, alpha: float = 0.0):
+        super().__init__(alpha=alpha)
+
+    def execute(self, ctx, Q, R):
+        qvecs = ctx.backend.embed_queries(Q)                  # [NQ, dim]
+        emb = ctx.backend.dense.emb
+
+        def one(qv, docids, scores):
+            d = emb[jnp.maximum(docids, 0)] @ qv
+            return jnp.where(docids >= 0,
+                             self.params["alpha"] * scores + d, -jnp.inf)
+
+        s = ctx.backend.vmap_queries(one, None, qvecs, R["docids"], R["scores"])
+        return Q, _sort_by_scores(R, s)

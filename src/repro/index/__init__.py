@@ -1,0 +1,2 @@
+from repro.index.inverted import InvertedIndex, build_index  # noqa: F401
+from repro.index.corpus import synthesize_corpus, synthesize_topics  # noqa: F401

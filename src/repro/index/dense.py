@@ -1,0 +1,77 @@
+"""Dense (embedding) index: brute-force chunked-matmul scoring + top-k.
+
+Used by neural re-rank stages and dense-retrieval transformers.  Document
+embeddings come either from a trained encoder or, for infrastructure tests,
+from deterministic random-projection of term-count vectors (fast, content-
+correlated, no training required).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.inverted import InvertedIndex
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseIndex:
+    emb: jax.Array       # [D, dim] unit-normalised
+    dim: int
+
+    def tree_flatten(self):
+        return (self.emb,), (self.dim,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+def build_dense_index(index: InvertedIndex, dim: int = 64, seed: int = 0,
+                      chunk: int = 1 << 21) -> DenseIndex:
+    """Random-projection doc embeddings from the forward file (host loop
+    over doc chunks to bound memory)."""
+    rng = np.random.default_rng(seed)
+    proj = rng.standard_normal((index.vocab, dim)).astype(np.float32) / np.sqrt(dim)
+    fwd_start = np.asarray(index.fwd_start)
+    fwd_terms = np.asarray(index.fwd_terms)
+    fwd_tfs = np.asarray(index.fwd_tfs).astype(np.float32)
+    D = index.n_docs
+    emb = np.zeros((D, dim), np.float32)
+    doc_of = np.repeat(np.arange(D), np.diff(fwd_start))
+    # chunk the scatter: proj[fwd_terms] would otherwise materialise an
+    # [nnz, dim] buffer (tens of GB at Robust scale)
+    F = fwd_terms.shape[0]
+    for s in range(0, F, chunk):
+        e = min(s + chunk, F)
+        np.add.at(emb, doc_of[s:e],
+                  proj[fwd_terms[s:e]] * np.log1p(fwd_tfs[s:e])[:, None])
+    emb /= np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-6)
+    return DenseIndex(jnp.asarray(emb), dim)
+
+
+def embed_query(dense: DenseIndex, index: InvertedIndex, terms, weights,
+                proj_seed: int = 0):
+    """Project a sparse query into the dense space (same projection)."""
+    rng = np.random.default_rng(proj_seed)
+    proj = jnp.asarray(rng.standard_normal((index.vocab, dense.dim))
+                       .astype(np.float32) / np.sqrt(dense.dim))
+    t = jnp.maximum(terms, 0)
+    vec = jnp.sum(proj[t] * (weights * (terms >= 0))[:, None], axis=0)
+    return vec / jnp.maximum(jnp.linalg.norm(vec), 1e-6)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def dense_topk(dense: DenseIndex, qvec: jax.Array, *, k: int):
+    scores = dense.emb @ qvec
+    top_s, top_d = jax.lax.top_k(scores, k)
+    return top_d.astype(jnp.int32), top_s
+
+
+@jax.jit
+def dense_score(dense: DenseIndex, qvec: jax.Array, docids: jax.Array):
+    return jnp.where(docids >= 0, dense.emb[jnp.maximum(docids, 0)] @ qvec, 0.0)

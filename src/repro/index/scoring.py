@@ -1,0 +1,94 @@
+"""Weighting models over gathered postings — BM25, TF.IDF, QL-Dirichlet, DPH,
+CoordMatch — each with a block-level score upper bound for block-max pruning.
+
+All functions are pure jnp over arrays shaped [..] of (tf, doc_len) with
+per-term (df, cf) broadcast alongside; collection stats enter as scalars.
+The multi-model single-pass evaluation used by the fused "fat" pipeline is
+:func:`score_all` (one gather, F model scores) — the paper's RQ2 insight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Registry
+
+WEIGHTING_MODELS = Registry("weighting model")
+
+# Default parameters (Terrier/Anserini defaults)
+BM25_K1, BM25_B = 1.2, 0.75
+QL_MU = 2500.0
+
+
+def _idf(df, n_docs):
+    return jnp.log1p((n_docs - df + 0.5) / (df + 0.5))
+
+
+@WEIGHTING_MODELS.register("BM25")
+def bm25(tf, doc_len, df, cf, stats):
+    tf = tf.astype(jnp.float32)
+    dl = doc_len.astype(jnp.float32)
+    idf = _idf(df.astype(jnp.float32), stats["n_docs"])
+    denom = tf + BM25_K1 * (1 - BM25_B + BM25_B * dl / stats["avg_doclen"])
+    return idf * tf * (BM25_K1 + 1.0) / jnp.maximum(denom, 1e-9)
+
+
+@WEIGHTING_MODELS.register("TF_IDF")
+def tf_idf(tf, doc_len, df, cf, stats):
+    tf = tf.astype(jnp.float32)
+    idf = jnp.log(stats["n_docs"] / jnp.maximum(df.astype(jnp.float32), 1.0))
+    # Robertson's TF with length normalisation
+    k = 1.2 * (0.25 + 0.75 * doc_len.astype(jnp.float32) / stats["avg_doclen"])
+    return idf * tf / (tf + k)
+
+
+@WEIGHTING_MODELS.register("QL")
+def ql_dirichlet(tf, doc_len, df, cf, stats):
+    """Query likelihood w/ Dirichlet smoothing (log-space, shifted so that
+    tf=0 contributes 0 — rank-equivalent and sparse-friendly)."""
+    tf = tf.astype(jnp.float32)
+    dl = doc_len.astype(jnp.float32)
+    p_c = cf.astype(jnp.float32) / stats["total_terms"]
+    num = tf + QL_MU * p_c
+    den = dl + QL_MU
+    base = QL_MU * p_c / jnp.maximum(den, 1.0)
+    return jnp.log(jnp.maximum(num, 1e-20) / jnp.maximum(den, 1.0)) - \
+        jnp.log(jnp.maximum(base, 1e-20))
+
+
+@WEIGHTING_MODELS.register("DPH")
+def dph(tf, doc_len, df, cf, stats):
+    tf = tf.astype(jnp.float32)
+    dl = jnp.maximum(doc_len.astype(jnp.float32), 1.0)
+    f = jnp.clip(tf / dl, 1e-9, 1.0 - 1e-9)
+    norm = (1.0 - f) ** 2 / (tf + 1.0)
+    avg = stats["total_terms"] / stats["n_docs"]
+    info = tf * jnp.log2(jnp.maximum(
+        tf * avg / dl * stats["n_docs"] / jnp.maximum(cf.astype(jnp.float32), 1.0),
+        1e-9))
+    bonus = 0.5 * jnp.log2(2.0 * jnp.pi * tf * (1.0 - f) + 1e-9)
+    return jnp.maximum(norm * (info + bonus), 0.0)
+
+
+@WEIGHTING_MODELS.register("Coord")
+def coord(tf, doc_len, df, cf, stats):
+    """Coordination level match (# matching terms)."""
+    return (tf > 0).astype(jnp.float32)
+
+
+def upper_bound(model: str, block_max_tf, block_min_dl, df, cf, stats):
+    """Per-block score upper bound: evaluate the model at the block's most
+    favourable (tf, dl) corner.  Monotone in tf and anti-monotone in dl for
+    all registered models."""
+    fn = WEIGHTING_MODELS[model]
+    return fn(block_max_tf, block_min_dl, df, cf, stats)
+
+
+def score_all(models: list[str], tf, doc_len, df, cf, stats) -> jax.Array:
+    """Single-pass multi-model scoring: [..] inputs -> [.., F] scores.
+
+    This is the fused *fat* evaluation: the postings gather is shared and
+    every weighting model reads the same registers/VMEM-resident tiles.
+    """
+    outs = [WEIGHTING_MODELS[m](tf, doc_len, df, cf, stats) for m in models]
+    return jnp.stack(outs, axis=-1)

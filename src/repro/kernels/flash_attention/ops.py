@@ -1,0 +1,185 @@
+"""Jitted wrapper for flash attention with backend dispatch + custom VJP.
+
+The backward pass recomputes attention flash-style (no O(S·T) residuals),
+which is what collapses the memory roofline term of the train cells
+(EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BKV, DEFAULT_BQ, flash_attention_pallas)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q, k, v, causal, chunk):
+    return flash_attention_ref(q, k, v, causal=causal, chunk=chunk)
+
+
+def _flash_fwd(q, k, v, causal, chunk):
+    return _flash(q, k, v, causal, chunk), (q, k, v)
+
+
+def _flash_bwd(causal, chunk, res, g):
+    q, k, v = res
+    # rematerialised backward: recompute probs, no saved score tensors
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal,
+                                               chunk=chunk), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# q-chunked flash on the XLA path (the §Perf memory-term optimisation)
+# ---------------------------------------------------------------------------
+#
+# lax.scan over q blocks; each block sees its full kv row at once (row-exact
+# softmax, no online rescale needed), so the largest transient is
+# [B, bq, H, T] instead of [B, H, S, T], and the custom VJP saves only
+# (q, k, v, o, lse) — O(S·D) residuals.  This is what a TPU flash kernel
+# does, expressed in HLO so the CPU dry-run measures it.
+
+FLASH_BQ = 512
+
+
+def _mask(q_idx, k_idx, causal, chunk):
+    ok = jnp.ones((q_idx.shape[0], k_idx.shape[0]), bool)
+    if causal:
+        ok &= k_idx[None, :] <= q_idx[:, None]
+    if chunk:
+        ok &= (k_idx[None, :] // chunk) == (q_idx[:, None] // chunk)
+    return ok
+
+
+def _fwd_block(qb, kh, vh, q_idx, k_idx, causal, chunk, scale):
+    """qb [B,bq,H,D]; kh/vh [B,T,H,D] -> (ob, lse_b)."""
+    s = jnp.einsum("bqhd,bthd->bqht", qb.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * scale
+    ok = _mask(q_idx, k_idx, causal, chunk)
+    s = jnp.where(ok[None, :, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqht,bthd->bqhd", p.astype(vh.dtype), vh)
+    o = o / jnp.maximum(l, 1e-20)[..., None].astype(o.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-20))
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_chunked(q, kh, vh, causal, chunk, bq):
+    o, _ = _flash_chunked_fwd_impl(q, kh, vh, causal, chunk, bq)
+    return o
+
+
+def _flash_chunked_fwd_impl(q, kh, vh, causal, chunk, bq):
+    B, S, H, D = q.shape
+    T = kh.shape[1]
+    nb = S // bq
+    scale = D ** -0.5
+    k_idx = jnp.arange(T, dtype=jnp.int32)
+    qb = jnp.moveaxis(q.reshape(B, nb, bq, H, D), 1, 0)
+
+    def body(_, inp):
+        qblk, i = inp
+        q_idx = i * bq + jnp.arange(bq, dtype=jnp.int32)
+        return None, _fwd_block(qblk, kh, vh, q_idx, k_idx, causal, chunk,
+                                scale)
+
+    _, (o, lse) = jax.lax.scan(body, None, (qb, jnp.arange(nb)))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, H, D)
+    lse = jnp.moveaxis(lse, 0, 1).reshape(B, S, H)
+    return o, lse
+
+
+def _flash_chunked_fwd(q, kh, vh, causal, chunk, bq):
+    o, lse = _flash_chunked_fwd_impl(q, kh, vh, causal, chunk, bq)
+    return o, (q, kh, vh, o, lse)
+
+
+def _flash_chunked_bwd(causal, chunk, bq, res, do):
+    q, kh, vh, o, lse = res
+    B, S, H, D = q.shape
+    T = kh.shape[1]
+    nb = S // bq
+    scale = D ** -0.5
+    k_idx = jnp.arange(T, dtype=jnp.int32)
+    mv = lambda x: jnp.moveaxis(x.reshape(B, nb, bq, *x.shape[2:]), 1, 0)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)  # [B,S,H]
+
+    def body(carry, inp):
+        dk, dv = carry
+        qblk, doblk, lseblk, dblk, i = inp
+        q_idx = i * bq + jnp.arange(bq, dtype=jnp.int32)
+        s = jnp.einsum("bqhd,bthd->bqht", qblk.astype(jnp.float32),
+                       kh.astype(jnp.float32)) * scale
+        ok = _mask(q_idx, k_idx, causal, chunk)
+        s = jnp.where(ok[None, :, None, :], s, -1e30)
+        p = jnp.exp(s - lseblk[..., None])                     # [B,bq,H,T]
+        dp = jnp.einsum("bqhd,bthd->bqht", doblk.astype(jnp.float32),
+                        vh.astype(jnp.float32))
+        ds = p * (dp - dblk[..., None]) * scale
+        dq_b = jnp.einsum("bqht,bthd->bqhd", ds,
+                          kh.astype(jnp.float32))
+        dk = dk + jnp.einsum("bqht,bqhd->bthd", ds, qblk.astype(jnp.float32))
+        dv = dv + jnp.einsum("bqht,bqhd->bthd", p, doblk.astype(jnp.float32))
+        return (dk, dv), dq_b
+
+    zeros = jnp.zeros((B, T, H, D), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(
+        body, (zeros, zeros),
+        (mv(q), mv(do), mv(lse), mv(delta), jnp.arange(nb)))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, S, H, D).astype(q.dtype)
+    return dq, dk.astype(kh.dtype), dv.astype(vh.dtype)
+
+
+_flash_chunked.defvjp(_flash_chunked_fwd, _flash_chunked_bwd)
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True, chunk: int = 0,
+                        bq: int = FLASH_BQ):
+    """GQA wrapper: expand kv heads (broadcast view) and run the q-chunked
+    flash path; exact vs the naive reference, O(S·D) residuals."""
+    B, S, H, D = q.shape
+    HKV = k.shape[2]
+    G = H // HKV
+    kh = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vh = jnp.repeat(v, G, axis=2) if G > 1 else v
+    bq_eff = min(bq, S)
+    while S % bq_eff:
+        bq_eff //= 2
+    return _flash_chunked(q, kh, vh, causal, chunk, max(bq_eff, 1))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, chunk: int = 0,
+                    bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV,
+                    impl: str = "auto", interpret: bool = False,
+                    bias=None):
+    """Causal GQA flash attention. [B,S,H,D] x [B,T,Hkv,D] -> [B,S,H,D].
+
+    ``bias`` is accepted for interface parity with the xla path but must be
+    None (masks are causal/chunk-structural in the kernel).
+    """
+    assert bias is None, "flash kernel computes masks structurally"
+    S, T = q.shape[1], k.shape[1]
+    if impl == "auto":
+        use_pallas = (jax.default_backend() == "tpu" and S % bq == 0
+                      and T % bkv == 0)
+        impl = "pallas" if use_pallas else "remat_ref"
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, chunk=chunk,
+                                      bq=min(bq, S), bkv=min(bkv, T),
+                                      interpret=interpret)
+    if impl == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, chunk=chunk,
+                                      bq=min(bq, S), bkv=min(bkv, T),
+                                      interpret=True)
+    return _flash(q, k, v, causal, chunk)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (GQA, causal + chunked-local)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, chunk: int = 0):
+    B, S, H, D = q.shape
+    T, HKV = k.shape[1], k.shape[2]
+    G = H // HKV
+    qg = q.reshape(B, S, HKV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * (D ** -0.5)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= ki <= qi
+    if chunk:
+        ok &= (ki // chunk) == (qi // chunk)
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)

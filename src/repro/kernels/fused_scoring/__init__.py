@@ -1,0 +1,1 @@
+from repro.kernels.fused_scoring.ops import fused_scoring  # noqa: F401

@@ -1,0 +1,31 @@
+"""Jitted public wrapper for fused_scoring (pads to the block multiple and
+dispatches to the Pallas kernel, or the jnp oracle on non-TPU backends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import round_up
+from repro.kernels.fused_scoring.fused_scoring import (BLOCK_P, SUPPORTED,
+                                                       fused_scoring_pallas)
+from repro.kernels.fused_scoring.ref import fused_scoring_ref
+
+
+def fused_scoring(tf, dl, df, cf, *, models: tuple[str, ...], stats: dict,
+                  impl: str = "auto", interpret: bool = False):
+    """[N] postings columns -> [N, F] multi-model scores (one HBM pass)."""
+    assert all(m in SUPPORTED for m in models), models
+    kw = dict(models=tuple(models), n_docs=stats["n_docs"],
+              avg_dl=stats["avg_doclen"], total_terms=stats["total_terms"])
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return fused_scoring_ref(tf, dl, df, cf, **kw)
+    n = tf.shape[0]
+    n_pad = round_up(n, BLOCK_P)
+    pad = lambda x: jnp.pad(x, (0, n_pad - n))
+    out = fused_scoring_pallas(
+        pad(tf).astype(jnp.int32), pad(dl).astype(jnp.int32),
+        pad(df).astype(jnp.int32), pad(cf).astype(jnp.int32),
+        interpret=interpret or jax.default_backend() != "tpu", **kw)
+    return out[:n]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused_scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.index import scoring
+
+
+def fused_scoring_ref(tf, dl, df, cf, *, models, n_docs, avg_dl, total_terms):
+    stats = {"n_docs": float(n_docs), "avg_doclen": float(avg_dl),
+             "total_terms": float(total_terms)}
+    out = scoring.score_all(list(models), tf, dl, df, cf, stats)
+    return jnp.where((tf > 0)[..., None], out, 0.0).astype(jnp.float32)

@@ -1,0 +1,1 @@
+from repro.kernels.topk.ops import streaming_topk  # noqa: F401

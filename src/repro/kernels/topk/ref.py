@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for streaming_topk."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def streaming_topk_ref(scores, *, k: int):
+    vals, idxs = jax.lax.top_k(scores.astype(jnp.float32), k)
+    return vals, idxs.astype(jnp.int32)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: streaming top-k with block-max skipping.
+
+The TPU-idiomatic BlockMaxWAND (DESIGN.md §2): scores stream through VMEM in
+blocks; a [k] scratch holds the running top-k.  A block whose max is ≤ the
+running k-th score (θ) is *skipped entirely* (``@pl.when``) — the dynamic-
+pruning threshold exactly as in WAND, at block granularity.  The grid is
+sequential on TPU so the scratch carries across blocks.
+
+Merge step: k iterations of (argmax over block, argmin over scratch) — pure
+VPU masks/maxes, no sort.  Intended for k ≤ 128 (rank-cutoff regime of RQ1);
+larger k falls back to ``lax.top_k`` in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 4096
+NEG = -3.0e38  # python float: jnp scalars would be captured as consts
+
+
+def _kernel(scores_ref, vals_ref, idxs_ref, *, k, block, n_blocks):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        vals_ref[...] = jnp.full((k,), NEG, jnp.float32)
+        idxs_ref[...] = jnp.full((k,), -1, jnp.int32)
+
+    blk = scores_ref[...].astype(jnp.float32)            # [block]
+    gidx = b * block + jax.lax.iota(jnp.int32, block)
+    blk_max = jnp.max(blk)
+    theta = jnp.min(vals_ref[...])
+
+    @pl.when(blk_max > theta)                            # block-max skip
+    def _merge():
+        def body(_, carry):
+            cand, vals, idxs = carry
+            j = jnp.argmax(cand)
+            m = cand[j]
+            mi = gidx[j]
+            p = jnp.argmin(vals)
+            take = m > vals[p]
+            vals = vals.at[p].set(jnp.where(take, m, vals[p]))
+            idxs = idxs.at[p].set(jnp.where(take, mi, idxs[p]))
+            cand = cand.at[j].set(NEG)
+            return cand, vals, idxs
+
+        cand0 = blk
+        _, vals, idxs = jax.lax.fori_loop(
+            0, k, body, (cand0, vals_ref[...], idxs_ref[...]))
+        vals_ref[...] = vals
+        idxs_ref[...] = idxs
+
+
+def _out_kernel(vals_ref, idxs_ref, ovals_ref, oidxs_ref):
+    ovals_ref[...] = vals_ref[...]
+    oidxs_ref[...] = idxs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def streaming_topk_pallas(scores, *, k: int, block: int = BLOCK_S,
+                          interpret: bool = False):
+    """scores [N] (N % block == 0) -> (values [k], indices [k]), unsorted."""
+    n = scores.shape[0]
+    assert n % block == 0, (n, block)
+    n_blocks = n // block
+    kernel = functools.partial(_kernel, k=k, block=block, n_blocks=n_blocks)
+
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((k,), lambda i: (0,)),
+                   pl.BlockSpec((k,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((k,), jnp.float32),
+                   jax.ShapeDtypeStruct((k,), jnp.int32)],
+        interpret=interpret,
+    )(scores)
+    order = jnp.argsort(-vals)
+    return vals[order], idxs[order]

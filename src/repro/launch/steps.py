@@ -1,0 +1,385 @@
+"""Step bundles: (arch × shape × mesh) -> jittable fn + abstract inputs +
+shardings.  This is the single bridge used by the dry-run, the roofline
+benchmarks and the real train/serve launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.common import round_up
+from repro.configs.registry import ArchDef, get_arch
+from repro.models import gnn as gnn_lib
+from repro.models import transformer_lm as tlm
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...] = ()
+    model_flops_per_step: float = 0.0   # 6·N·D-style useful-FLOPs estimate
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _abstract_state(init_fn, logical, mesh, profile):
+    aparams = jax.eval_shape(init_fn)
+    pspecs = sh.spec_tree(aparams, logical, mesh, profile)
+    aopt = jax.eval_shape(opt_lib.init, aparams)
+    ospec = {"m": sh.zero1_sharding_tree(aparams, pspecs, mesh),
+             "v": sh.zero1_sharding_tree(aparams, pspecs, mesh),
+             "step": _repl(mesh)}
+    astate = {"params": aparams, "opt": aopt}
+    sstate = {"params": pspecs, "opt": ospec}
+    return astate, sstate
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_model_flops(cfg: tlm.LMConfig, tokens: int, kind: str) -> float:
+    n = cfg.params_active
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def _lm_train(arch: ArchDef, cell, mesh, opt_cfg) -> StepBundle:
+    cfg = arch.model_cfg("train_4k")
+    profile = sh.PROFILES[cfg.sharding_profile](mesh)
+    astate, sstate = _abstract_state(
+        lambda: tlm.init_params(cfg, jax.random.key(0)),
+        tlm.param_logical(cfg), mesh, profile)
+    B, S = cell["batch"], cell["seq"]
+    abatch = {"tokens": SDS((B, S), jnp.int32), "targets": SDS((B, S), jnp.int32)}
+    sbatch = {k: sh.named_sharding(mesh, (sh.BATCH, None), (B, S), profile)
+              for k in abatch}
+    loss = functools.partial(tlm.loss_fn, cfg, mesh=mesh)
+    fn = ts.make_train_step(loss, opt_cfg, n_micro=arch.train_microbatches)
+    return StepBundle(
+        name="train_step", fn=fn, args=(astate, abatch),
+        in_shardings=(sstate, sbatch), out_shardings=(sstate, _repl(mesh)),
+        donate_argnums=(0,),
+        model_flops_per_step=_lm_model_flops(cfg, B * S, "train"))
+
+
+def _lm_serve(arch: ArchDef, shape_name: str, cell, mesh) -> StepBundle:
+    cfg = arch.model_cfg(shape_name)
+    profile = sh.PROFILES[cfg.sharding_profile](mesh)
+    aparams = jax.eval_shape(lambda: tlm.init_params(cfg, jax.random.key(0)))
+    pspecs = sh.spec_tree(aparams, tlm.param_logical(cfg), mesh, profile)
+
+    if cell["kind"] == "prefill":
+        B, S = cell["batch"], cell["seq"]
+        T = S
+        tok_sds = SDS((B, S), jnp.int32)
+        new_tokens = B * S
+    else:
+        B, T = cell["batch"], cell["kv_len"]
+        tok_sds = SDS((B, 1), jnp.int32)
+        new_tokens = B
+    acache = {"k": SDS((cfg.n_layers, B, T, cfg.n_kv, cfg.d_head), cfg.dtype),
+              "v": SDS((cfg.n_layers, B, T, cfg.n_kv, cfg.d_head), cfg.dtype)}
+    scache = sh.spec_tree(acache, tlm.kv_cache_logical(), mesh, profile)
+    logits_sh = sh.named_sharding(mesh, (sh.BATCH, sh.VOCAB),
+                                  (B, cfg.vocab), profile)
+    tok_sh = sh.named_sharding(mesh, (sh.BATCH, None), tok_sds.shape, profile)
+
+    if cell["kind"] == "prefill":
+        def serve_step(params, tokens, cache):
+            return tlm.prefill(cfg, params, tokens, cache, mesh=mesh)
+        args = (aparams, tok_sds, acache)
+        in_sh = (pspecs, tok_sh, scache)
+        donate = (2,)
+    else:
+        def serve_step(params, tokens, cache, pos):
+            return tlm.decode_step(cfg, params, tokens, cache, pos, mesh=mesh)
+        args = (aparams, tok_sds, acache, SDS((), jnp.int32))
+        in_sh = (pspecs, tok_sh, scache, _repl(mesh))
+        donate = (2,)
+    return StepBundle(
+        name="serve_step", fn=serve_step, args=args, in_shardings=in_sh,
+        out_shardings=(logits_sh, scache), donate_argnums=donate,
+        model_flops_per_step=_lm_model_flops(cfg, new_tokens, "serve"))
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _pad_graph(batch: dict[str, jax.Array], multiple: int) -> dict[str, jax.Array]:
+    """Pad nodes/edges (inside jit) to shardable multiples; padded edges
+    self-loop on a dummy node, padded labels are masked out."""
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    N, E = x.shape[0], src.shape[0]
+    Np = round_up(N + 1, multiple)
+    Ep = round_up(E, multiple)
+    out = dict(batch)
+    out["x"] = jnp.pad(x, ((0, Np - N), (0, 0)))
+    dummy = jnp.int32(Np - 1)
+    out["src"] = jnp.pad(src, (0, Ep - E), constant_values=dummy)
+    out["dst"] = jnp.pad(dst, (0, Ep - E), constant_values=dummy)
+    mask = batch.get("label_mask", jnp.ones((N,), bool))
+    if "graph_ids" in batch:   # graph-level labels: pad a dummy graph
+        G = batch["node_counts"].shape[0]
+        out["graph_ids"] = jnp.pad(batch["graph_ids"], (0, Np - N),
+                                   constant_values=G)
+        out["node_counts"] = jnp.pad(batch["node_counts"], (0, 1),
+                                     constant_values=1)
+        out["labels"] = jnp.pad(batch["labels"], (0, 1))
+        out["label_mask"] = jnp.pad(
+            batch.get("label_mask", jnp.ones((G,), bool)), (0, 1))
+    else:
+        out["labels"] = jnp.pad(batch["labels"], (0, Np - N))
+        out["label_mask"] = jnp.pad(mask, (0, Np - N))
+    return out
+
+
+def _gnn_flops(cfg: gnn_lib.GATConfig, n_nodes: int, n_edges: int) -> float:
+    # dense projections + edge messages, fwd+bwd (×3 of fwd)
+    f = 0.0
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        h = 1 if last else cfg.n_heads
+        fdim = cfg.n_classes if last else cfg.d_hidden
+        f += 2.0 * n_nodes * d_in * h * fdim      # X @ W
+        f += 4.0 * n_edges * h * fdim             # messages + weighting
+        d_in = h * fdim
+    return 3.0 * f
+
+
+def _gnn_train(arch: ArchDef, shape_name: str, cell, mesh, opt_cfg) -> StepBundle:
+    cfg = arch.model_cfg(shape_name)
+    profile = sh.PROFILES["tp"](mesh)
+    astate, sstate = _abstract_state(
+        lambda: gnn_lib.init_params(cfg, jax.random.key(0)),
+        gnn_lib.param_logical(cfg), mesh, profile)
+
+    if "n_graphs" in cell:
+        G = cell["n_graphs"]
+        N = G * cell["nodes_per_graph"]
+        E = G * cell["edges_per_graph"]
+        abatch = {
+            "x": SDS((N, cell["d_feat"]), jnp.float32),
+            "src": SDS((E,), jnp.int32), "dst": SDS((E,), jnp.int32),
+            "graph_ids": SDS((N,), jnp.int32),
+            "node_counts": SDS((G,), jnp.int32),
+            "labels": SDS((G,), jnp.int32),
+        }
+    else:
+        N, E = cell["n_nodes"], cell["n_edges"]
+        abatch = {
+            "x": SDS((N, cell["d_feat"]), jnp.float32),
+            "src": SDS((E,), jnp.int32), "dst": SDS((E,), jnp.int32),
+            "labels": SDS((N,), jnp.int32),
+            "label_mask": SDS((N,), jnp.bool_),
+        }
+    # inputs arrive in their EXACT published sizes (replicated when they
+    # don't divide the mesh); the step pads+constrains internally.
+    multiple = 128
+    for a in mesh.axis_names:
+        multiple *= mesh.shape[a]
+
+    def loss(params, batch):
+        padded = _pad_graph(batch, multiple)
+        prof = sh.PROFILES["tp"](mesh)
+        padded["x"] = sh.constrain(padded["x"], (sh.NODES, None), mesh, prof)
+        padded["src"] = sh.constrain(padded["src"], (sh.EDGES,), mesh, prof)
+        padded["dst"] = sh.constrain(padded["dst"], (sh.EDGES,), mesh, prof)
+        return gnn_lib.loss_fn(cfg, params, padded)
+
+    sbatch = jax.tree.map(lambda a: _repl(mesh), abatch)
+    fn = ts.make_train_step(loss, opt_cfg, n_micro=1)
+    return StepBundle(
+        name="train_step", fn=fn, args=(astate, abatch),
+        in_shardings=(sstate, sbatch), out_shardings=(sstate, _repl(mesh)),
+        donate_argnums=(0,),
+        model_flops_per_step=_gnn_flops(cfg, N, E))
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+def _recsys_inputs(arch_id: str, cfg, B: int) -> dict[str, SDS]:
+    if arch_id == "dcn-v2":
+        return {"dense": SDS((B, cfg.n_dense), jnp.float32),
+                "cat": SDS((B, cfg.n_sparse), jnp.int32),
+                "label": SDS((B,), jnp.int32)}
+    if arch_id == "autoint":
+        return {"cat": SDS((B, cfg.n_sparse), jnp.int32),
+                "label": SDS((B,), jnp.int32)}
+    if arch_id == "dien":
+        return {"hist_items": SDS((B, cfg.seq_len), jnp.int32),
+                "hist_cates": SDS((B, cfg.seq_len), jnp.int32),
+                "hist_mask": SDS((B, cfg.seq_len), jnp.float32),
+                "target_item": SDS((B,), jnp.int32),
+                "target_cate": SDS((B,), jnp.int32),
+                "label": SDS((B,), jnp.int32)}
+    if arch_id == "mind":
+        return {"hist_items": SDS((B, cfg.seq_len), jnp.int32),
+                "hist_mask": SDS((B, cfg.seq_len), jnp.float32),
+                "target_item": SDS((B,), jnp.int32)}
+    raise ValueError(arch_id)
+
+
+def _recsys_flops(arch_id: str, cfg, B: int, kind: str) -> float:
+    mult = 3.0 if kind == "train" else 1.0
+    if arch_id == "dcn-v2":
+        d = cfg.d_input
+        f = cfg.n_cross_layers * 2 * d * d + 2 * d * cfg.mlp[0] + \
+            2 * cfg.mlp[0] * cfg.mlp[1] + 2 * cfg.mlp[1] * cfg.mlp[2]
+        return mult * B * f
+    if arch_id == "autoint":
+        F, dh = cfg.n_sparse, cfg.n_heads * cfg.d_attn
+        f = cfg.n_attn_layers * (3 * 2 * F * cfg.embed_dim * dh +
+                                 2 * 2 * F * F * dh)
+        return mult * B * f
+    if arch_id == "dien":
+        h = cfg.gru_dim
+        f = cfg.seq_len * 2 * 3 * ((cfg.d_behav + h) * h +   # GRU-1
+                                   (h + h) * h)              # AUGRU
+        return mult * B * f
+    if arch_id == "mind":
+        if kind == "retrieval":   # interests computed once; per-candidate dot
+            return 2.0 * B * cfg.n_interests * cfg.embed_dim
+        f = cfg.capsule_iters * 4 * cfg.seq_len * cfg.embed_dim * cfg.n_interests \
+            + 2 * cfg.seq_len * cfg.embed_dim ** 2
+        return mult * B * f
+    raise ValueError(arch_id)
+
+
+def _recsys_batch_shardings(abatch, mesh, profile):
+    return {k: sh.named_sharding(mesh, (sh.BATCH,) + (None,) * (len(a.shape) - 1),
+                                 a.shape, profile)
+            for k, a in abatch.items()}
+
+
+def _recsys_bundle(arch: ArchDef, shape_name: str, cell, mesh, opt_cfg) -> StepBundle:
+    cfg = arch.model_cfg(shape_name)
+    mod = arch.module
+    profile = sh.PROFILES["tp"](mesh)
+
+    if cell["kind"] == "train":
+        astate, sstate = _abstract_state(
+            lambda: mod.init_params(cfg, jax.random.key(0)),
+            mod.param_logical(cfg), mesh, profile)
+        abatch = _recsys_inputs(arch.arch_id, cfg, cell["batch"])
+        sbatch = _recsys_batch_shardings(abatch, mesh, profile)
+        loss = functools.partial(mod.loss_fn, cfg, mesh=mesh)
+        fn = ts.make_train_step(loss, opt_cfg, n_micro=arch.train_microbatches)
+        return StepBundle(
+            name="train_step", fn=fn, args=(astate, abatch),
+            in_shardings=(sstate, sbatch), out_shardings=(sstate, _repl(mesh)),
+            donate_argnums=(0,),
+            model_flops_per_step=_recsys_flops(arch.arch_id, cfg, cell["batch"], "train"))
+
+    aparams = jax.eval_shape(lambda: mod.init_params(cfg, jax.random.key(0)))
+    pspecs = sh.spec_tree(aparams, mod.param_logical(cfg), mesh, profile)
+
+    if cell["kind"] == "serve":
+        abatch = _recsys_inputs(arch.arch_id, cfg, cell["batch"])
+        abatch.pop("label", None)
+        sbatch = _recsys_batch_shardings(abatch, mesh, profile)
+
+        def serve_step(params, batch):
+            if arch.arch_id == "mind":
+                return mod.forward(cfg, params, batch, mesh=mesh)
+            return jax.nn.sigmoid(mod.forward(cfg, params, batch, mesh=mesh))
+
+        out_sh = sh.named_sharding(mesh, (sh.BATCH,), (cell["batch"],), profile)
+        return StepBundle(
+            name="serve_step", fn=serve_step, args=(aparams, abatch),
+            in_shardings=(pspecs, sbatch), out_shardings=out_sh,
+            model_flops_per_step=_recsys_flops(arch.arch_id, cfg, cell["batch"], "serve"))
+
+    # retrieval: 1 query context vs n_candidates item ids
+    C = cell["candidates"]
+    abatch = _recsys_inputs(arch.arch_id, cfg, cell["batch"])
+    abatch.pop("label", None)
+    abatch["candidates"] = SDS((C,), jnp.int32)
+    sbatch = jax.tree.map(lambda a: _repl(mesh), abatch)
+    sbatch["candidates"] = sh.named_sharding(mesh, (sh.CANDIDATES,), (C,), profile)
+
+    def retrieval_step(params, batch):
+        return mod.retrieval_score(cfg, params, batch, mesh=mesh)
+
+    return StepBundle(
+        name="retrieval_step", fn=retrieval_step, args=(aparams, abatch),
+        in_shardings=(pspecs, sbatch),
+        out_shardings=sh.named_sharding(mesh, (sh.CANDIDATES,), (C,), profile),
+        model_flops_per_step=_recsys_flops(arch.arch_id, cfg, C, "retrieval"))
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def _apply_overrides(arch: ArchDef, overrides: dict[str, str]) -> ArchDef:
+    """Hillclimb lever: ``attn_impl=flash seq_parallel=true moe.dispatch=...``
+    applied on top of the arch's model config (dataclasses.replace)."""
+    if not overrides:
+        return arch
+    base_fn = arch.model_cfg
+
+    def patched(shape):
+        cfg = base_fn(shape)
+        top, moe_kv = {}, {}
+        for key, val in overrides.items():
+            if key == "train_microbatches":   # ArchDef-level, not model cfg
+                continue
+            v: Any = val
+            if isinstance(val, str):
+                if val.lower() in ("true", "false"):
+                    v = val.lower() == "true"
+                elif val.isdigit():
+                    v = int(val)
+            if key.startswith("moe."):
+                moe_kv[key[4:]] = v
+            else:
+                top[key] = v
+        if moe_kv and getattr(cfg, "moe", None) is not None:
+            top["moe"] = dataclasses.replace(cfg.moe, **moe_kv)
+        return dataclasses.replace(cfg, **top) if top else cfg
+
+    mb = overrides.get("train_microbatches")
+    return dataclasses.replace(
+        arch, model_cfg=patched,
+        train_microbatches=int(mb) if mb else arch.train_microbatches)
+
+
+def build_bundle(arch_id: str, shape_name: str, mesh,
+                 opt_cfg: opt_lib.AdamWConfig | None = None,
+                 overrides: dict[str, str] | None = None) -> StepBundle:
+    arch = get_arch(arch_id)
+    if shape_name not in arch.shapes:
+        raise KeyError(f"{arch_id} has no shape {shape_name}; "
+                       f"known: {sorted(arch.shapes)}")
+    arch = _apply_overrides(arch, overrides or {})
+    cell = arch.shapes[shape_name]
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    if arch.family == "lm":
+        if cell["kind"] == "train":
+            return _lm_train(arch, cell, mesh, opt_cfg)
+        return _lm_serve(arch, shape_name, cell, mesh)
+    if arch.family == "gnn":
+        return _gnn_train(arch, shape_name, cell, mesh, opt_cfg)
+    if arch.family == "recsys":
+        return _recsys_bundle(arch, shape_name, cell, mesh, opt_cfg)
+    raise ValueError(arch.family)

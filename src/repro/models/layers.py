@@ -1,0 +1,255 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention, gated MLP.
+
+All layers are pure functions over explicit param pytrees (no framework
+dependency).  Attention supports three execution paths selected by
+``impl``:
+
+* ``"xla"``    — einsum formulation; the path used for distributed
+                 lowering/dry-run (GSPMD inserts the collectives).
+* ``"pallas"`` — the Pallas flash-attention kernel (TPU target; validated
+                 in interpret mode on CPU).
+* ``"ref"``    — alias of xla kept for kernel oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import DEFAULT_DTYPE
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=DEFAULT_DTYPE, scale: float | None = None):
+    """Truncated-normal fan-in init (LLM standard)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+
+def attention_bias(
+    q_positions: jax.Array,   # [S] int32
+    k_positions: jax.Array,   # [T] int32
+    *,
+    causal: bool = True,
+    chunk: int = 0,
+    kv_valid_len: jax.Array | None = None,  # [B] or scalar
+) -> jax.Array:
+    """Additive fp32 bias [.., S, T]; -inf at masked positions.
+
+    ``chunk > 0`` restricts attention to the same length-``chunk`` block
+    (Llama-4 style chunked local attention).  ``kv_valid_len`` masks padded
+    KV-cache slots during decode.
+    """
+    q = q_positions[:, None]
+    k = k_positions[None, :]
+    ok = jnp.ones((q_positions.shape[0], k_positions.shape[0]), bool)
+    if causal:
+        ok &= k <= q
+    if chunk:
+        ok &= (k // chunk) == (q // chunk)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    if kv_valid_len is not None:
+        valid = k_positions[None, None, :] < jnp.asarray(kv_valid_len).reshape(-1, 1, 1)
+        bias = bias[None] + jnp.where(valid, 0.0, NEG_INF)
+    return bias
+
+
+# ---------------------------------------------------------------------------
+# GQA attention core
+# ---------------------------------------------------------------------------
+
+#: Above this many query rows, the xla path switches to q-chunked attention
+#: so the [S, T] score tensor never materialises whole (exact lazy-softmax —
+#: each q row still sees the full T at once, no online rescaling needed).
+Q_CHUNK = 1024
+
+
+def _attn_core(qg, k, v, bias):
+    """qg [B, s, n_kv, G, D] vs k/v [B, T, n_kv, D]; bias [..., s, T]."""
+    D = qg.shape[-1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * (D ** -0.5)
+    while bias.ndim < scores.ndim:
+        bias = bias[None]
+    probs = jax.nn.softmax(scores + bias, axis=-1)
+    return jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+
+
+def gqa_attention(
+    q: jax.Array,   # [B, S, n_q, D]
+    k: jax.Array,   # [B, T, n_kv, D]
+    v: jax.Array,   # [B, T, n_kv, D]
+    bias: jax.Array,  # broadcastable to [B, n_kv, G, S, T] from [.., S, T]
+    *,
+    impl: str = "xla",
+    q_chunk: int = Q_CHUNK,
+) -> jax.Array:
+    """Grouped-query attention; softmax in fp32. Returns [B, S, n_q, D]."""
+    if impl == "flash":
+        # q-chunked flash on the XLA path: caller guarantees pure-causal
+        # masking (training path, no KV cache) — see transformer_lm._block
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention_xla(q, k, v, causal=True)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, causal=True,
+            impl="interpret" if jax.default_backend() != "tpu" else "auto")
+    B, S, n_q, D = q.shape
+    n_kv = k.shape[2]
+    G = n_q // n_kv
+    qg = q.reshape(B, S, n_kv, G, D)
+
+    if S <= q_chunk or S % q_chunk:
+        return _attn_core(qg, k, v, bias).reshape(B, S, n_q, D)
+
+    # q-chunked: scan over blocks of q rows; bias must carry full [S, T].
+    n_blocks = S // q_chunk
+    bias5 = bias  # [..., S, T] with S at axis -2
+    qg_blk = qg.reshape(B, n_blocks, q_chunk, n_kv, G, D)
+
+    def body(_, blk_idx):
+        qb = jax.lax.dynamic_index_in_dim(qg_blk, blk_idx, 1, keepdims=False)
+        bb = jax.lax.dynamic_slice_in_dim(bias5, blk_idx * q_chunk, q_chunk,
+                                          axis=bias5.ndim - 2)
+        return None, _attn_core(qb, k, v, bb)
+
+    _, out = jax.lax.scan(body, None, jnp.arange(n_blocks))
+    # out: [n_blocks, B, q_chunk, n_kv, G, D] -> [B, S, n_q, D]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, n_q, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + core)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class AttnDims:
+    d_model: int
+    n_q: int
+    n_kv: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+
+
+def attn_init(key, dims: AttnDims, dtype=DEFAULT_DTYPE) -> dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (dims.d_model, dims.n_q, dims.d_head), dtype),
+        "wk": dense_init(ks[1], (dims.d_model, dims.n_kv, dims.d_head), dtype),
+        "wv": dense_init(ks[2], (dims.d_model, dims.n_kv, dims.d_head), dtype),
+        "wo": dense_init(ks[3], (dims.n_q, dims.d_head, dims.d_model), dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((dims.n_q, dims.d_head), dtype)
+        p["bk"] = jnp.zeros((dims.n_kv, dims.d_head), dtype)
+        p["bv"] = jnp.zeros((dims.n_kv, dims.d_head), dtype)
+    return p
+
+
+def attn_apply(
+    p: dict[str, Any],
+    x: jax.Array,                  # [B, S, d]
+    dims: AttnDims,
+    *,
+    positions: jax.Array,          # [S]
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,  # ([B,T,n_kv,D], ...)
+    cache_index: jax.Array | None = None,  # scalar write offset
+    causal: bool = True,
+    chunk: int = 0,
+    impl: str = "xla",
+):
+    """Returns (out [B,S,d], new_kv_cache or None)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+        k_positions = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        kv_valid = cache_index + x.shape[1]
+        bias = attention_bias(positions, k_positions, causal=causal, chunk=chunk,
+                              kv_valid_len=kv_valid)
+        # [B', S, T] -> [B', 1, 1, S, T] so the batch dim lands correctly.
+        bias = bias[:, None, None, :, :]
+    else:
+        bias = attention_bias(positions, positions, causal=causal, chunk=chunk)
+
+    out = gqa_attention(q, k, v, bias, impl=impl)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=DEFAULT_DTYPE) -> dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p: dict[str, Any], x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    hidden = jax.nn.silu(gate) * up
+    return jnp.einsum("bsf,fd->bsd", hidden, p["w_down"])

@@ -1,0 +1,1 @@
+from repro.models.recsys import autoint, dcn, dien, embedding, mind  # noqa: F401

@@ -1,0 +1,99 @@
+"""Sparse embedding substrate for recsys: the JAX EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag`` / CSR sparse — lookups are built from
+``jnp.take`` + ``jax.ops.segment_sum`` (this IS part of the system).  All
+categorical fields of a model share one concatenated table so a batch does a
+*single* gather regardless of field count; rows are shardable over the
+``model`` mesh axis (TABLE_ROWS).
+
+Criteo-style vocabularies are provided for the DCN-v2 / AutoInt configs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.common import round_up
+from repro.sharding import Ax
+
+# Criteo-Kaggle per-field vocabulary sizes (DLRM convention), 26 fields.
+CRITEO_VOCABS = [
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18,
+    15, 286181, 105, 142572,
+]
+
+
+class FieldTable:
+    """Concatenated per-field embedding table with precomputed offsets."""
+
+    def __init__(self, vocabs: list[int], embed_dim: int, *, pad_rows_to: int = 1):
+        self.vocabs = list(vocabs)
+        self.embed_dim = embed_dim
+        self.offsets = np.concatenate([[0], np.cumsum(vocabs)[:-1]]).astype(np.int64)
+        self.total_rows = round_up(int(sum(vocabs)), pad_rows_to)
+
+    def init(self, key, dtype=jnp.float32):
+        scale = self.embed_dim ** -0.5
+        return (jax.random.normal(key, (self.total_rows, self.embed_dim),
+                                  jnp.float32) * scale).astype(dtype)
+
+    def logical(self):
+        return Ax(sh.TABLE_ROWS, None)
+
+    def lookup(self, table: jax.Array, cat: jax.Array) -> jax.Array:
+        """cat [B, F] per-field ids -> [B, F, D] in one gather."""
+        flat = cat + jnp.asarray(self.offsets, cat.dtype)
+        return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array, segment_ids: jax.Array,
+                  num_segments: int, *, combiner: str = "sum",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """Multi-hot EmbeddingBag: gather rows then segment-reduce.
+
+    indices/segment_ids: [nnz]; returns [num_segments, D].
+    """
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        counts = jax.ops.segment_sum(jnp.ones_like(indices, jnp.float32),
+                                     segment_ids, num_segments=num_segments)
+        return summed / jnp.maximum(counts, 1.0)[:, None]
+    if combiner == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_segments)
+    raise ValueError(combiner)
+
+
+def mlp_tower(key, dims: list[int], dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), jnp.float32) * a ** -0.5).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp_tower_logical(dims: list[int]):
+    return [{"w": Ax(None, sh.MLP), "b": Ax(sh.MLP)} for _ in range(len(dims) - 1)]
+
+
+def mlp_tower_apply(layers, x, *, final_act: bool = False):
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if final_act or i < len(layers) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logit: jax.Array, label: jax.Array):
+    """Binary cross-entropy from logits (fp32)."""
+    logit = logit.astype(jnp.float32)
+    label = label.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * label +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss

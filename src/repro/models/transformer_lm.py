@@ -1,0 +1,341 @@
+"""Decoder-only GQA transformer LM (scan-over-layers, shardable).
+
+One implementation covers all five assigned LM archs:
+qwen2-1.5b (QKV bias, tied embeddings), glm4-9b, internlm2-1.8b,
+llama4-scout-17b-a16e (MoE every layer, chunked local attention on 3/4
+layers), olmoe-1b-7b (MoE 64e top-8).
+
+Layer params are stacked on a leading ``L`` dim and the forward pass is a
+``jax.lax.scan`` so compile time is O(1) in depth; layer bodies are
+``jax.checkpoint``-rematerialised during training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.common import DEFAULT_DTYPE
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.sharding import Ax
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_q: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    moe: moe_lib.MoEConfig | None = None
+    # per-layer chunked local attention: 0 = all-global; else layers whose
+    # index % chunk_every != chunk_every-1 use chunked attention (llama4 iRoPE)
+    attn_chunk: int = 0
+    attn_chunk_every: int = 4
+    # execution knobs
+    attn_impl: str = "xla"           # "xla" | "pallas"
+    remat: bool = True
+    sharding_profile: str = "tp"     # "tp" | "fsdp"
+    seq_parallel: bool = False       # shard residual seq dim over 'model'
+    dtype: Any = DEFAULT_DTYPE
+
+    @property
+    def params_dense(self) -> int:
+        """Approximate parameter count excluding MoE experts."""
+        d, h = self.d_model, self.d_head
+        attn = self.n_layers * d * h * (2 * self.n_q + 2 * self.n_kv)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        mlp = 0 if self.moe else self.n_layers * 3 * d * self.d_ff
+        return attn + emb + mlp + 2 * self.n_layers * d
+
+    @property
+    def params_total(self) -> int:
+        n = self.params_dense
+        if self.moe:
+            m = self.moe
+            n += self.n_layers * m.n_experts * 3 * self.d_model * m.d_ff_expert
+            n += self.n_layers * self.d_model * m.n_experts
+            if m.n_shared:
+                n += self.n_layers * 3 * self.d_model * (m.d_ff_shared or m.d_ff_expert)
+        return n
+
+    @property
+    def params_active(self) -> int:
+        n = self.params_dense
+        if self.moe:
+            m = self.moe
+            n += self.n_layers * m.top_k * 3 * self.d_model * m.d_ff_expert
+            if m.n_shared:
+                n += self.n_layers * 3 * self.d_model * (m.d_ff_shared or m.d_ff_expert)
+        return n
+
+    def attn_dims(self) -> L.AttnDims:
+        return L.AttnDims(d_model=self.d_model, n_q=self.n_q, n_kv=self.n_kv,
+                          d_head=self.d_head, qkv_bias=self.qkv_bias,
+                          rope_theta=self.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key) -> dict[str, Any]:
+    kemb, kout, klay = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ka, km, _ = jax.random.split(k, 3)
+        p = {
+            "attn": L.attn_init(ka, cfg.attn_dims(), cfg.dtype),
+            "ln_attn": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_mlp": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if cfg.moe:
+            p["moe"] = moe_lib.moe_init(km, cfg.d_model, cfg.moe, cfg.dtype)
+        else:
+            p["mlp"] = L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.dtype)
+        return p
+
+    layer_params = jax.vmap(layer_init)(jax.random.split(klay, cfg.n_layers))
+    params = {
+        "embed": L.dense_init(kemb, (cfg.vocab, cfg.d_model), cfg.dtype, scale=1.0),
+        "layers": layer_params,
+        "ln_final": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(kout, (cfg.d_model, cfg.vocab), cfg.dtype)
+    return params
+
+
+def param_logical(cfg: LMConfig) -> dict[str, Any]:
+    """Logical-axis tree mirroring :func:`init_params` output."""
+    attn = {
+        "wq": Ax(None, sh.EMBED, sh.Q_HEADS, sh.HEAD_DIM),
+        "wk": Ax(None, sh.EMBED, sh.KV_HEADS, sh.HEAD_DIM),
+        "wv": Ax(None, sh.EMBED, sh.KV_HEADS, sh.HEAD_DIM),
+        "wo": Ax(None, sh.Q_HEADS, sh.HEAD_DIM, sh.EMBED),
+    }
+    if cfg.qkv_bias:
+        attn |= {"bq": Ax(None, sh.Q_HEADS, sh.HEAD_DIM),
+                 "bk": Ax(None, sh.KV_HEADS, sh.HEAD_DIM),
+                 "bv": Ax(None, sh.KV_HEADS, sh.HEAD_DIM)}
+    layer = {"attn": attn,
+             "ln_attn": Ax(None, None), "ln_mlp": Ax(None, None)}
+    if cfg.moe:
+        layer["moe"] = {
+            "router": Ax(None, sh.EMBED, None),
+            "w_gate": Ax(None, sh.EXPERTS, sh.EMBED, sh.MLP),
+            "w_up": Ax(None, sh.EXPERTS, sh.EMBED, sh.MLP),
+            "w_down": Ax(None, sh.EXPERTS, sh.MLP, sh.EMBED),
+        }
+        if cfg.moe.n_shared:
+            layer["moe"]["shared"] = {
+                "w_gate": Ax(None, sh.EMBED, sh.MLP),
+                "w_up": Ax(None, sh.EMBED, sh.MLP),
+                "w_down": Ax(None, sh.MLP, sh.EMBED),
+            }
+    else:
+        layer["mlp"] = {"w_gate": Ax(None, sh.EMBED, sh.MLP),
+                        "w_up": Ax(None, sh.EMBED, sh.MLP),
+                        "w_down": Ax(None, sh.MLP, sh.EMBED)}
+    tree = {"embed": Ax(sh.VOCAB, sh.EMBED),
+            "layers": layer,
+            "ln_final": Ax(None)}
+    if not cfg.tie_embeddings:
+        tree["unembed"] = Ax(sh.EMBED, sh.VOCAB)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_chunks(cfg: LMConfig) -> jax.Array:
+    """Per-layer attention chunk size (0 = global attention)."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.attn_chunk:
+        is_chunked = (idx % cfg.attn_chunk_every) != (cfg.attn_chunk_every - 1)
+        return jnp.where(is_chunked, cfg.attn_chunk, 0).astype(jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+def _chunk_bias(q_pos, k_pos, chunk: jax.Array) -> jax.Array:
+    """Causal+chunk additive bias with *traced* per-layer chunk size."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    ok = k <= q
+    in_chunk = jnp.where(chunk > 0, (k // jnp.maximum(chunk, 1)) == (q // jnp.maximum(chunk, 1)), True)
+    return jnp.where(ok & in_chunk, 0.0, L.NEG_INF).astype(jnp.float32)
+
+
+def _attn_with_traced_chunk(p, x, cfg: LMConfig, positions, chunk,
+                            kv_cache=None, cache_index=None):
+    """attn_apply variant where chunk is a traced scalar (scan-carried)."""
+    dims = cfg.attn_dims()
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q, positions, dims.rope_theta)
+    k = L.apply_rope(k, positions, dims.rope_theta)
+    new_cache = None
+    # prefill at offset 0: attention only sees the fresh tokens (causal),
+    # so the flash path applies even though we also write the cache
+    flash_prefill = (cfg.attn_impl in ("flash", "pallas")
+                     and kv_cache is not None
+                     and isinstance(cache_index, int) and cache_index == 0
+                     and x.shape[1] > 1)
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        new_cache = (ck, cv)
+        if flash_prefill:
+            bias = _chunk_bias(positions, positions, chunk)
+        else:
+            k, v = ck, cv
+            k_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+            bias = _chunk_bias(positions, k_pos, chunk)
+            valid = k_pos[None, :] < (cache_index + x.shape[1])
+            bias = jnp.where(valid, bias, L.NEG_INF)
+    else:
+        bias = _chunk_bias(positions, positions, chunk)
+    impl = cfg.attn_impl
+    if impl in ("pallas", "flash") and kv_cache is not None and not flash_prefill:
+        impl = "xla"   # decode stays on the xla path (bias-driven masks)
+    if impl == "flash" and cfg.attn_chunk:
+        # per-layer traced chunk flag selects between two static-chunk flash
+        # branches (llama4 interleave: 3/4 chunked-local, 1/4 global)
+        from repro.kernels.flash_attention.ops import flash_attention_xla
+        out = jax.lax.cond(
+            chunk > 0,
+            lambda: flash_attention_xla(q, k, v, causal=True,
+                                        chunk=cfg.attn_chunk),
+            lambda: flash_attention_xla(q, k, v, causal=True, chunk=0))
+    else:
+        out = L.gqa_attention(q, k, v, bias, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _block(cfg: LMConfig, mesh, profile, p, x, positions, chunk,
+           kv_cache=None, cache_index=None):
+    """One transformer layer. Returns (x', new_cache, metrics)."""
+    def cst(t):
+        if mesh is None:
+            return t
+        seq = "model" if cfg.seq_parallel else None
+        return jax.lax.with_sharding_constraint(
+            t, sh.named_sharding(mesh, (sh.BATCH, seq, None), t.shape, profile))
+
+    h = L.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    attn_out, new_cache = _attn_with_traced_chunk(
+        p["attn"], h, cfg, positions, chunk, kv_cache, cache_index)
+    x = cst(x + attn_out)
+    h = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    metrics = {}
+    if cfg.moe:
+        mlp_out, metrics = moe_lib.moe_apply(p["moe"], h, cfg.moe)
+    else:
+        mlp_out = L.mlp_apply(p["mlp"], h)
+    x = cst(x + mlp_out)
+    return x, new_cache, metrics
+
+
+def forward(cfg: LMConfig, params, tokens: jax.Array, *, mesh=None) -> tuple[jax.Array, dict]:
+    """Training forward: tokens [B, S] -> logits [B, S, V] (+ aux metrics)."""
+    profile = sh.PROFILES[cfg.sharding_profile](mesh) if mesh is not None else None
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    chunks = _layer_chunks(cfg)
+
+    def body(x, scanned):
+        layer_p, chunk = scanned
+        x, _, metrics = _block(cfg, mesh, profile, layer_p, x, positions, chunk)
+        return x, metrics
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, metrics = jax.lax.scan(body, x, (params["layers"], chunks))
+    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(cfg.dtype))
+    if mesh is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, sh.named_sharding(mesh, (sh.BATCH, None, sh.VOCAB),
+                                      logits.shape, profile))
+    aux = {k: jnp.sum(v) for k, v in metrics.items()}
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params, batch, *, mesh=None):
+    """Next-token cross-entropy (fp32 logsumexp) + MoE aux losses."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    logits, aux = forward(cfg, params, tokens, mesh=mesh)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce + sum(aux.values(), jnp.float32(0.0))
+    return total, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with stacked KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_logical():
+    return {"k": Ax(None, sh.BATCH, sh.KV_SEQ, sh.KV_HEADS, None),
+            "v": Ax(None, sh.BATCH, sh.KV_SEQ, sh.KV_HEADS, None)}
+
+
+def _serve_pass(cfg: LMConfig, params, tokens, cache, start_pos, *, mesh=None):
+    """Shared prefill/decode pass: runs tokens [B, S] at absolute offset
+    ``start_pos`` against the cache; returns (logits_last, new_cache)."""
+    profile = sh.PROFILES[cfg.sharding_profile](mesh) if mesh is not None else None
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    positions = start_pos + jnp.arange(S, dtype=jnp.int32)
+    chunks = _layer_chunks(cfg)
+
+    def body(x, scanned):
+        layer_p, chunk, ck, cv = scanned
+        x, new_cache, _ = _block(cfg, mesh, profile, layer_p, x, positions, chunk,
+                                 kv_cache=(ck, cv), cache_index=start_pos)
+        return x, new_cache
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], chunks, cache["k"], cache["v"]))
+    x = L.rmsnorm(x[:, -1:], params["ln_final"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(cfg.dtype))[:, 0]
+    return logits, {"k": new_k, "v": new_v}
+
+
+def prefill(cfg: LMConfig, params, tokens, cache, *, mesh=None):
+    # static offset 0 keeps the cache update a statically-placed slice
+    return _serve_pass(cfg, params, tokens, cache, 0, mesh=mesh)
+
+
+def decode_step(cfg: LMConfig, params, token, cache, pos, *, mesh=None):
+    """token [B, 1] int32, pos: scalar int32 absolute position."""
+    return _serve_pass(cfg, params, token, cache, pos, mesh=mesh)

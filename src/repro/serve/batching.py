@@ -1,0 +1,187 @@
+"""Continuous-batching decode server (vLLM-style slot scheduler, JAX-native).
+
+A fixed pool of B decode slots over one shared KV cache; finished/empty
+slots are refilled from the request queue every step (prefill for the new
+request writes into the slot's cache rows).  One jitted decode step serves
+the whole pool; per-slot positions make ragged decode exact.
+
+This is the serving half of the paper's pipeline story: a neural Rerank
+stage (e.g. an LM scoring documents) runs behind this scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer_lm as tlm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [P] int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: tlm.LMConfig, params, *, slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = tlm.init_kv_cache(cfg, slots, max_len)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.positions = np.zeros(slots, np.int32)
+        self.last_token = np.zeros((slots, 1), np.int32)
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+
+        # one jitted ragged decode step for the pool
+        def step(params, tokens, cache, positions, active):
+            logits, cache = _ragged_decode(cfg, params, tokens, cache, positions)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, 0)
+            return nxt, cache
+
+        self._step = jax.jit(step, donate_argnums=2)
+
+        def prefill_one(params, tokens, cache, slot, length):
+            return _slot_prefill(cfg, params, tokens, cache, slot, length)
+
+        self._prefill = jax.jit(prefill_one, donate_argnums=2,
+                                static_argnames=())
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                P = len(req.prompt)
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, self.cache = self._prefill(
+                    self.params, toks, self.cache, jnp.int32(s), jnp.int32(P))
+                first = int(jnp.argmax(logits))
+                req.generated.append(first)
+                self.slot_req[s] = req
+                self.positions[s] = P
+                self.last_token[s, 0] = first
+
+    def step(self):
+        """Admit + one decode step for all active slots."""
+        self._admit()
+        active = np.array([r is not None for r in self.slot_req])
+        if not active.any():
+            return False
+        nxt, self.cache = self._step(
+            self.params, jnp.asarray(self.last_token), self.cache,
+            jnp.asarray(self.positions), jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            self.positions[s] += 1
+            self.last_token[s, 0] = tok
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if (len(req.generated) >= req.max_new_tokens or hit_eos or
+                    self.positions[s] >= self.max_len - 1):
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+        return True
+
+    def run_to_completion(self, max_steps: int = 10000):
+        steps = 0
+        while (self.queue or any(self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+
+# ---------------------------------------------------------------------------
+# ragged decode internals (per-slot positions)
+# ---------------------------------------------------------------------------
+
+def _ragged_decode(cfg, params, tokens, cache, positions):
+    """tokens [B,1]; positions [B] (absolute, per slot)."""
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens]          # [B,1,d]
+    chunks = tlm._layer_chunks(cfg)
+
+    def body(x, scanned):
+        layer_p, chunk, ck, cv = scanned
+        x = _ragged_block(cfg, layer_p, x, positions, chunk, ck, cv)
+        return x[0], x[1:]
+
+    def scan_body(carry, scanned):
+        x = carry
+        layer_p, chunk, ck, cv = scanned
+        x, ck, cv = _ragged_block(cfg, layer_p, x, positions, chunk, ck, cv)
+        return x, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        scan_body, x, (params["layers"], chunks, cache["k"], cache["v"]))
+    from repro.models import layers as L
+    x = L.rmsnorm(x[:, -1:], params["ln_final"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(cfg.dtype))[:, 0]
+    return logits, {"k": new_k, "v": new_v}
+
+
+def _ragged_block(cfg, p, x, positions, chunk, ck, cv):
+    from repro.models import layers as L
+    dims = cfg.attn_dims()
+    h = L.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+    if dims.qkv_bias:
+        q, k, v = q + p["attn"]["bq"], k + p["attn"]["bk"], v + p["attn"]["bv"]
+    # per-slot absolute positions
+    q = jax.vmap(lambda qq, pp: L.apply_rope(qq, pp[None], dims.rope_theta))(
+        q, positions)
+    kk = jax.vmap(lambda kx, pp: L.apply_rope(kx, pp[None], dims.rope_theta))(
+        k, positions)
+    B, T = ck.shape[0], ck.shape[1]
+    onehot = jax.nn.one_hot(positions, T, dtype=ck.dtype)   # [B,T]
+    ck = ck * (1 - onehot)[..., None, None] + \
+        onehot[..., None, None] * kk.astype(ck.dtype)
+    cv = cv * (1 - onehot)[..., None, None] + \
+        onehot[..., None, None] * v.astype(cv.dtype)
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    valid = k_pos[None, :] <= positions[:, None]             # [B,T]
+    bias = jnp.where(valid, 0.0, L.NEG_INF)[:, None, None, None, :]
+    out = L.gqa_attention(q, ck, cv, bias, impl="xla")
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+    h2 = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.moe:
+        from repro.models import moe as moe_lib
+        mlp_out, _ = moe_lib.moe_apply(p["moe"], h2, cfg.moe)
+    else:
+        mlp_out = L.mlp_apply(p["mlp"], h2)
+    return x + mlp_out, ck, cv
+
+
+def _slot_prefill(cfg, params, tokens, cache, slot, length):
+    """Prefill one slot's cache rows from a [1, P] prompt."""
+    B1, P = tokens.shape
+    slot_cache = {"k": jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, 1),
+                  "v": jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, 1)}
+    logits, new_slot = tlm.prefill(cfg, params, tokens, slot_cache)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], new_slot["k"], slot, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], new_slot["v"], slot, 1),
+    }
+    return logits, cache

@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+
+from repro.core.compiler import JaxBackend
+from repro.core.data import make_queries
+from repro.index import build_index, synthesize_corpus, synthesize_topics
+
+
+@pytest.fixture(scope="session")
+def small_ir():
+    """Shared small corpus/index/backend/topics for IR-system tests."""
+    corpus = synthesize_corpus(n_docs=3000, vocab=12000, mean_len=100, seed=7)
+    topics = synthesize_topics(corpus, n_topics=8, q_len=3, rels_per_topic=12,
+                               seed=8)
+    index = build_index(corpus)
+    backend = JaxBackend(index, default_k=60, query_chunk=4)
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    return {"corpus": corpus, "topics": topics, "index": index,
+            "backend": backend, "Q": Q}

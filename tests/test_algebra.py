@@ -1,0 +1,175 @@
+"""Operator algebra semantics (paper Tables 1-2) + rewrite preservation.
+
+Property tests (hypothesis) assert the system invariants:
+  * rewriting preserves result semantics (the paper's core equivalence claim)
+  * cutoff/scale/linear laws
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Extract, FatRetrieve, MultiRetrieve, PrunedRetrieve,
+                        Retrieve, optimize_pipeline)
+from repro.core.rewrite import optimize_pipeline
+from repro.core.transformer import Cutoff, Linear, Then
+
+
+def run(p, env, optimize=False):
+    return p.transform(env["Q"], backend=env["backend"], optimize=optimize)
+
+
+def docsets(R, k=None):
+    d = np.asarray(R["docids"])
+    if k:
+        d = d[:, :k]
+    return [set(int(x) for x in row if x >= 0) for row in d]
+
+
+# ---------------------------------------------------------------------------
+# operator semantics
+# ---------------------------------------------------------------------------
+
+def test_cutoff_truncates_sorted(small_ir):
+    R = run(Retrieve("BM25", k=30) % 10, small_ir)
+    s = np.asarray(R["scores"])
+    assert s.shape[1] == 10
+    assert (np.diff(s, axis=1) <= 1e-6).all()
+
+
+def test_scale_scales_scores_only(small_ir):
+    R1 = run(Retrieve("BM25", k=20), small_ir)
+    R2 = run(2.5 * Retrieve("BM25", k=20), small_ir)
+    assert (np.asarray(R1["docids"]) == np.asarray(R2["docids"])).all()
+    np.testing.assert_allclose(np.asarray(R2["scores"]),
+                               2.5 * np.asarray(R1["scores"]), rtol=1e-5)
+
+
+def test_linear_is_combsum(small_ir):
+    """+ must equal per-doc weighted score sums over the union."""
+    a, b = Retrieve("BM25", k=25), Retrieve("QL", k=25)
+    Ra, Rb, Rsum = run(a, small_ir), run(b, small_ir), \
+        run(0.5 * a + 2.0 * b, small_ir, optimize=False)
+    for q in range(len(Rsum["qid"])):
+        expect = {}
+        for d, s in zip(np.asarray(Ra["docids"])[q], np.asarray(Ra["scores"])[q]):
+            if d >= 0:
+                expect[int(d)] = expect.get(int(d), 0) + 0.5 * float(s)
+        for d, s in zip(np.asarray(Rb["docids"])[q], np.asarray(Rb["scores"])[q]):
+            if d >= 0:
+                expect[int(d)] = expect.get(int(d), 0) + 2.0 * float(s)
+        got = {int(d): float(s) for d, s in
+               zip(np.asarray(Rsum["docids"])[q], np.asarray(Rsum["scores"])[q])
+               if d >= 0}
+        top = sorted(expect.items(), key=lambda kv: -kv[1])[:len(got)]
+        for d, s in top:
+            assert d in got
+            np.testing.assert_allclose(got[d], s, rtol=1e-4, atol=1e-5)
+
+
+def test_union_intersect(small_ir):
+    a, b = Retrieve("BM25", k=15), Retrieve("QL", k=15)
+    Ra, Rb = run(a, small_ir), run(b, small_ir)
+    Ru = run(a | b, small_ir)
+    Ri = run(a & b, small_ir)
+    for q in range(len(Ru["qid"])):
+        sa, sb = docsets(Ra)[q], docsets(Rb)[q]
+        assert docsets(Ru)[q] == sa | sb
+        assert docsets(Ri)[q] == sa & sb
+
+
+def test_concat_appends_below(small_ir):
+    a, b = Retrieve("BM25", k=10), Retrieve("QL", k=20)
+    Rc = run(a ^ b, small_ir)
+    Ra = run(a, small_ir)
+    d = np.asarray(Rc["docids"])
+    s = np.asarray(Rc["scores"])
+    da = np.asarray(Ra["docids"])
+    for q in range(d.shape[0]):
+        # R1 docs first, in order, with original scores on top
+        assert (d[q, :10] == da[q]).all()
+        # appended part strictly below R1's minimum
+        valid = np.isfinite(s[q, 10:])
+        if valid.any():
+            assert s[q, 10:][valid].max() < s[q, :10].min()
+        # no duplicates
+        live = d[q][d[q] >= 0]
+        assert len(live) == len(set(live.tolist()))
+
+
+def test_feature_union_columns(small_ir):
+    p = Retrieve("BM25", k=15) >> (Extract("QL") ** Extract("TF_IDF") **
+                                   Extract("DPH"))
+    R = run(p, small_ir)
+    assert R["features"].shape == (len(R["qid"]), 15, 3)
+    assert np.isfinite(np.asarray(R["features"])).all()
+
+
+# ---------------------------------------------------------------------------
+# rewrite rules preserve semantics
+# ---------------------------------------------------------------------------
+
+def test_cutoff_pushdown_structure(small_ir):
+    opt = optimize_pipeline(Retrieve("BM25") % 10, small_ir["backend"])
+    assert isinstance(opt, PrunedRetrieve)
+    assert opt.params["k"] == 10
+
+
+def test_cutoff_pushdown_preserves_topk(small_ir):
+    base = run(Retrieve("BM25") % 10, small_ir, optimize=False)
+    opt = run(Retrieve("BM25") % 10, small_ir, optimize=True)
+    # approximate block-max pruning: require ≥90% overlap, exact scores on hits
+    for sa, sb in zip(docsets(base), docsets(opt)):
+        assert len(sa & sb) >= 9
+
+
+def test_fat_fusion_exact(small_ir):
+    pipe = Retrieve("BM25", k=20) >> (Extract("QL") ** Extract("TF_IDF"))
+    opt = optimize_pipeline(pipe, small_ir["backend"])
+    assert isinstance(opt, FatRetrieve)
+    Ra, Rb = run(pipe, small_ir, optimize=False), run(opt, small_ir, optimize=False)
+    assert (np.asarray(Ra["docids"]) == np.asarray(Rb["docids"])).all()
+    np.testing.assert_allclose(np.asarray(Ra["features"]),
+                               np.asarray(Rb["features"]), atol=1e-4)
+
+
+def test_linear_fusion_exact(small_ir):
+    pipe = 0.6 * Retrieve("BM25", k=20) + 0.4 * Retrieve("DPH", k=20)
+    opt = optimize_pipeline(pipe, small_ir["backend"])
+    assert isinstance(opt, MultiRetrieve)
+    Ra = run(pipe, small_ir, optimize=False)
+    Rb = run(opt, small_ir, optimize=False)
+    # same union-top-k up to tie ordering: compare score-aligned doc sets
+    for q in range(len(Ra["qid"])):
+        sa = docsets(Ra, 10)[q]
+        sb = docsets(Rb, 10)[q]
+        assert len(sa & sb) >= 9
+
+
+@settings(max_examples=6, deadline=None)
+@given(k1=st.sampled_from([3, 8, 20]), k2=st.sampled_from([5, 12]),
+       alpha=st.floats(0.1, 4.0))
+def test_rewrite_laws(small_ir, k1, k2, alpha):
+    be = small_ir["backend"]
+    # cutoff merge law
+    p = (Retrieve("BM25", k=30) % k1) % k2
+    opt = optimize_pipeline(p, be)
+    ks = min(k1, k2)
+    R = run(opt, small_ir, optimize=False)
+    assert R["docids"].shape[1] == ks
+    # scale folding: alpha*(alpha*T) == alpha^2 * T structurally
+    q = alpha * (alpha * Retrieve("BM25", k=5))
+    assert abs(q.params["alpha"] - alpha * alpha) < 1e-6
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.permutations([("BM25", 0.5), ("QL", 1.5), ("TF_IDF", 1.0)]))
+def test_linear_commutative(small_ir, order):
+    """+ is commutative: any permutation yields the same fused result."""
+    pipes = sum(w * Retrieve(m, k=10) for m, w in order)
+    R = run(pipes, small_ir, optimize=True)
+    ref = sum(w * Retrieve(m, k=10)
+              for m, w in [("BM25", 0.5), ("QL", 1.5), ("TF_IDF", 1.0)])
+    Rr = run(ref, small_ir, optimize=True)
+    for q in range(len(R["qid"])):
+        assert docsets(R, 5)[q] == docsets(Rr, 5)[q]

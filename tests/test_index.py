@@ -1,0 +1,71 @@
+"""Inverted/forward index structural invariants + gather correctness."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.index.inverted import BLOCK, gather_postings
+
+
+def test_index_invariants(small_ir):
+    idx = small_ir["index"]
+    corpus = small_ir["corpus"]
+    term_start = np.asarray(idx.term_start)
+    doc_ids = np.asarray(idx.doc_ids)
+    tfs = np.asarray(idx.tfs)
+    df = np.asarray(idx.df)
+    # CSR offsets monotone, block-aligned
+    assert (np.diff(term_start) >= 0).all()
+    assert (np.diff(term_start) % BLOCK == 0).all()
+    # df equals live postings per term
+    for t in np.random.default_rng(0).integers(0, idx.vocab, 50):
+        s, e = term_start[t], term_start[t + 1]
+        live = (doc_ids[s:e] >= 0).sum()
+        assert live == df[t], t
+        # postings sorted by docid (within live region)
+        d = doc_ids[s:s + df[t]]
+        assert (np.diff(d) > 0).all()
+    # total collection size consistent
+    assert int(np.asarray(idx.cf).sum()) == idx.total_terms
+    assert idx.total_terms == len(corpus.doc_terms)
+
+
+def test_forward_inverted_transpose(small_ir):
+    """fwd(d) must contain (t, tf) iff inverted(t) contains (d, tf)."""
+    idx = small_ir["index"]
+    fwd_start = np.asarray(idx.fwd_start)
+    fwd_terms = np.asarray(idx.fwd_terms)
+    fwd_tfs = np.asarray(idx.fwd_tfs)
+    term_start = np.asarray(idx.term_start)
+    doc_ids = np.asarray(idx.doc_ids)
+    tfs = np.asarray(idx.tfs)
+    rng = np.random.default_rng(1)
+    for d in rng.integers(0, idx.n_docs, 20):
+        s, e = fwd_start[d], fwd_start[d + 1]
+        for t, tf in list(zip(fwd_terms[s:e], fwd_tfs[s:e]))[:10]:
+            ps, pe = term_start[t], term_start[t + 1]
+            row = doc_ids[ps:pe]
+            j = np.searchsorted(row[row >= 0], d)
+            assert row[j] == d
+            assert tfs[ps + j] == tf
+
+
+def test_gather_postings_matches_numpy(small_ir):
+    idx = small_ir["index"]
+    terms = jnp.asarray([5, 17, -1, 100], jnp.int32)
+    out = gather_postings(idx, terms, max_postings=small_ir["backend"].max_postings)
+    term_start = np.asarray(idx.term_start)
+    doc_ids = np.asarray(idx.doc_ids)
+    df = np.asarray(idx.df)
+    for i, t in enumerate([5, 17, -1, 100]):
+        if t < 0:
+            assert not bool(np.asarray(out["mask"])[i].any())
+            continue
+        got = np.asarray(out["doc_ids"])[i][np.asarray(out["mask"])[i]]
+        want = doc_ids[term_start[t]:term_start[t] + df[t]]
+        assert (got == want).all()
+
+
+def test_dense_index_unit_norm(small_ir):
+    emb = np.asarray(small_ir["backend"].dense.emb)
+    norms = np.linalg.norm(emb, axis=1)
+    assert np.all(norms < 1.001)
+    assert (norms > 0.99).mean() > 0.95

@@ -1,0 +1,59 @@
+"""Evaluation measures vs hand-computed values (trec_eval semantics)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import measures as M
+
+
+def _R(docids):
+    d = np.asarray(docids, np.int32)
+    return {"qid": jnp.arange(d.shape[0], dtype=jnp.int32),
+            "docids": jnp.asarray(d),
+            "scores": jnp.asarray(-np.arange(d.shape[1], dtype=np.float32))}
+
+
+def test_map_hand_computed():
+    # q0: rel docs {1, 3}; ranking [1, 2, 3] -> AP = (1/1 + 2/3)/2
+    R = _R([[1, 2, 3]])
+    qrels = {0: {1: 1, 3: 1}}
+    out = M.compute_measures(R, qrels, ["map"])
+    assert abs(out["map"] - (1.0 + 2 / 3) / 2) < 1e-6
+
+
+def test_precision_recall_rr():
+    R = _R([[9, 1, 2, 7]])
+    qrels = {0: {1: 1, 7: 2, 55: 1}}
+    out = M.compute_measures(R, qrels, ["P_2", "P_4", "recall_4",
+                                        "recip_rank", "num_rel_ret"])
+    assert abs(out["P_2"] - 0.5) < 1e-6
+    assert abs(out["P_4"] - 0.5) < 1e-6
+    assert abs(out["recall_4"] - 2 / 3) < 1e-6
+    assert abs(out["recip_rank"] - 0.5) < 1e-6
+    assert out["num_rel_ret"] == 2.0
+
+
+def test_ndcg_hand_computed():
+    # graded: ranking grades [2, 0, 1]; idcg over [2, 1, 0]
+    R = _R([[5, 6, 7]])
+    qrels = {0: {5: 2, 7: 1}}
+    out = M.compute_measures(R, qrels, ["ndcg_cut_3"])
+    dcg = (2 ** 2 - 1) / np.log2(2) + 0 + (2 ** 1 - 1) / np.log2(4)
+    idcg = (2 ** 2 - 1) / np.log2(2) + (2 ** 1 - 1) / np.log2(3)
+    assert abs(out["ndcg_cut_3"] - dcg / idcg) < 1e-6
+
+
+def test_perfect_and_empty_rankings():
+    R = _R([[1, 2], [8, 9]])
+    qrels = {0: {1: 1, 2: 1}, 1: {3: 1}}
+    out = M.compute_measures(R, qrels, ["map", "ndcg_cut_2"])
+    assert abs(out["map"] - 0.5) < 1e-6        # q0 perfect, q1 zero
+    assert abs(out["ndcg_cut_2"] - 0.5) < 1e-6
+
+
+def test_padding_ignored():
+    R = _R([[1, -1, -1]])
+    qrels = {0: {1: 1}}
+    out = M.compute_measures(R, qrels, ["map", "P_3"])
+    assert abs(out["map"] - 1.0) < 1e-6
+    assert abs(out["P_3"] - 1 / 3) < 1e-6

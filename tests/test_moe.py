@@ -1,0 +1,91 @@
+"""MoE dispatch invariants: scatter vs einsum equivalence, capacity, gating."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+def _setup(E, k, d=32, ff=16, dispatch="scatter", cf=1.25, **kw):
+    cfg = MoEConfig(n_experts=E, top_k=k, d_ff_expert=ff,
+                    capacity_factor=cf, dispatch=dispatch, **kw)
+    params = moe_init(jax.random.key(0), d, cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("E,k", [(4, 1), (8, 2), (16, 4)])
+def test_scatter_einsum_equivalent(E, k):
+    """Both dispatch strategies must produce identical outputs when no
+    tokens are dropped (generous capacity)."""
+    d = 32
+    cfg_s, params = _setup(E, k, d, dispatch="scatter", cf=float(E))
+    cfg_e = MoEConfig(n_experts=E, top_k=k, d_ff_expert=16,
+                      capacity_factor=float(E), dispatch="einsum",
+                      group_size=64)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 16, d)),
+                    jnp.float32)
+    out_s, m_s = moe_apply(params, x, cfg_s)
+    out_e, m_e = moe_apply(params, x, cfg_e)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_e),
+                               atol=1e-4)
+
+
+def test_capacity_drops_tokens():
+    """With 64 total capacity slots and 256 tokens top-1, some token outputs
+    must be zero (dropped), none NaN."""
+    d = 16
+    cfg, params = _setup(8, 1, d, cf=0.1)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, 256, d)),
+                    jnp.float32)
+    out, _ = moe_apply(params, x, cfg)
+    norms = np.linalg.norm(np.asarray(out)[0], axis=-1)
+    assert (norms == 0).any()          # dropped tokens
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_shared_expert_always_on():
+    """With a shared expert, even dropped tokens get nonzero output."""
+    d = 16
+    cfg = MoEConfig(n_experts=8, top_k=1, d_ff_expert=16, n_shared=1,
+                    d_ff_shared=16, capacity_factor=0.25)
+    params = moe_init(jax.random.key(3), d, cfg)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((1, 32, d)),
+                    jnp.float32)
+    out, _ = moe_apply(params, x, cfg)
+    norms = np.linalg.norm(np.asarray(out)[0], axis=-1)
+    assert (norms > 0).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.sampled_from([1, 3]), st.sampled_from([4, 8]))
+def test_moe_grads_finite(k, E):
+    d = 16
+    cfg, params = _setup(E, min(k, E), d)
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((1, 8, d)),
+                    jnp.float32)
+
+    def loss(p):
+        out, metrics = moe_apply(p, x, cfg)
+        return jnp.sum(out ** 2) + metrics["moe_aux"] + metrics["moe_z"]
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_aux_loss_penalises_imbalance():
+    """A router forced onto one expert must have higher aux loss than a
+    uniform router."""
+    d, E = 16, 8
+    cfg, params = _setup(E, 1, d, aux_loss_weight=1.0)
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((1, 64, d)),
+                    jnp.float32)
+    biased = dict(params)
+    biased["router"] = jnp.zeros_like(params["router"]).at[:, 0].set(50.0)
+    uniform = dict(params)
+    uniform["router"] = jnp.zeros_like(params["router"])
+    _, m_biased = moe_apply(biased, x, cfg)
+    _, m_uniform = moe_apply(uniform, x, cfg)
+    assert float(m_biased["moe_aux"]) > float(m_uniform["moe_aux"]) * 2

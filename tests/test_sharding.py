@@ -1,0 +1,63 @@
+"""Sharding-rule resolution logic (host-only, no devices needed beyond 1)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding as sh
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_drops_nondivisible(mesh11):
+    profile = {"q_heads": ("model",), "batch": ("data",)}
+    # both divide a 1-sized axis trivially
+    spec = sh.resolve_spec((sh.BATCH, sh.Q_HEADS), (4, 12), mesh11, profile)
+    assert spec == P("data", "model")
+
+
+def test_resolve_prefix_fallback():
+    profile = {"candidates": ("data", "model")}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # both axes size 1 -> divides; exercise the prefix logic with fake sizes
+    # via pure function: simulate with a mesh of shape (2, 3) using host trick
+    spec = sh.resolve_spec(("candidates",), (10,), mesh, profile)
+    assert spec == P(("data", "model"))
+
+
+def test_zero1_spec_extends_free_dim():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    s = sh.zero1_spec(P(None, "model"), (8, 16), mesh)
+    assert s == P("data", "model")
+    # no free divisible dim -> unchanged
+    s2 = sh.zero1_spec(P("data", None), (8, 7), mesh)
+    assert s2 == P("data", None)
+
+
+def test_ax_is_leaf():
+    tree = {"w": sh.Ax(None, sh.MLP), "b": sh.Ax(sh.MLP)}
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == 2
+    assert all(isinstance(l, sh.Ax) for l in leaves)
+
+
+def test_dp_axes():
+    m1 = jax.make_mesh((1, 1), ("data", "model"))
+    assert sh.dp_axes(m1) == ("data",)
+
+
+def test_profiles_cover_all_families(mesh11):
+    # activation axes every profile must place
+    for name, fn in sh.PROFILES.items():
+        prof = fn(mesh11)
+        for axis in [sh.BATCH, sh.KV_SEQ, sh.TABLE_ROWS, sh.EDGES,
+                     sh.CANDIDATES]:
+            assert axis in prof, (name, axis)
+    # weight axes for the weight-sharding profiles ('dp' replicates by design)
+    for name in ["tp", "fsdp", "zero3", "light"]:
+        prof = sh.PROFILES[name](mesh11)
+        for axis in [sh.MLP, sh.VOCAB, sh.EXPERTS]:
+            assert axis in prof, (name, axis)

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests: full pipelines, Experiment, fit, caching."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (DenseRerank, Experiment, Extract, LTRRerank, Retrieve,
+                        RM3Expand, SDMRewrite, StemRewrite, format_table)
+from repro.core.compiler import Context
+from repro.core.data import make_queries
+
+
+def test_experiment_table(small_ir):
+    env = small_ir
+    res = Experiment(
+        [Retrieve("BM25", k=30), Retrieve("QL", k=30)],
+        env["Q"], env["topics"].qrels, ["map", "ndcg_cut_10", "P_10"],
+        backend=env["backend"], names=["bm25", "ql"], measure_time=True)
+    assert len(res["table"]) == 2
+    for row in res["table"]:
+        assert 0.0 < row["map"] <= 1.0
+        assert row["mrt_ms"] > 0
+    assert "bm25" in format_table(res["table"])
+
+
+def test_prf_pipeline_runs_and_changes_ranking(small_ir):
+    env = small_ir
+    base = Retrieve("BM25", k=30)
+    prf = base >> RM3Expand(fb_terms=5, fb_docs=5) >> Retrieve("BM25", k=30)
+    Rb = base.transform(env["Q"], backend=env["backend"])
+    Rp = prf.transform(env["Q"], backend=env["backend"])
+    assert Rb["docids"].shape == Rp["docids"].shape
+    # expansion must actually alter at least one query's ranking
+    assert (np.asarray(Rb["docids"]) != np.asarray(Rp["docids"])).any()
+
+
+def test_query_rewriters(small_ir):
+    env = small_ir
+    for rw in [SDMRewrite(), StemRewrite()]:
+        pipe = rw >> Retrieve("BM25", k=10)
+        R = pipe.transform(env["Q"], backend=env["backend"])
+        assert np.isfinite(np.asarray(R["scores"])[:, 0]).all()
+
+
+def test_full_listing1_pipeline(small_ir):
+    """The paper's Listing 1 shape: PRF >> (features) >> LTR, trained."""
+    env = small_ir
+    fat = Retrieve("BM25", k=20) >> (Extract("QL") ** Extract("TF_IDF"))
+    full = fat >> LTRRerank(n_features=2, epochs=10)
+    full.fit(env["Q"], env["topics"].qrels, backend=env["backend"])
+    res = Experiment([Retrieve("BM25", k=20), full], env["Q"],
+                     env["topics"].qrels, ["map"], backend=env["backend"],
+                     names=["bm25", "ltr"])
+    assert res["table"][1]["map"] > 0.1
+
+
+def test_dense_rerank_pipeline(small_ir):
+    env = small_ir
+    pipe = Retrieve("BM25", k=20) >> DenseRerank(alpha=0.5)
+    R = pipe.transform(env["Q"], backend=env["backend"])
+    s = np.asarray(R["scores"])
+    assert (np.diff(s, axis=1) <= 1e-6).all()   # re-sorted
+
+
+def test_common_prefix_cache_shared(small_ir):
+    """Two pipelines sharing a prefix must execute the prefix once."""
+    env = small_ir
+    calls = {"n": 0}
+
+    def counting(Q, R):
+        calls["n"] += 1
+        return Q, R
+
+    from repro.core.transformer import Generic
+    probe = Generic(fn=counting)
+    base = Retrieve("BM25", k=10) >> probe
+    p1 = base >> Extract("QL")
+    p2 = base >> Extract("TF_IDF")
+    Experiment([p1, p2], env["Q"], env["topics"].qrels, ["map"],
+               backend=env["backend"], optimize=False)
+    assert calls["n"] == 1   # shared prefix ran once
+
+
+def test_generic_transformer_from_callable(small_ir):
+    env = small_ir
+
+    def boost_scores(Q, R):
+        return Q, {**R, "scores": R["scores"] + 1.0}
+
+    pipe = Retrieve("BM25", k=5) >> boost_scores
+    R = pipe.transform(env["Q"], backend=env["backend"])
+    base = Retrieve("BM25", k=5).transform(env["Q"], backend=env["backend"])
+    np.testing.assert_allclose(np.asarray(R["scores"]),
+                               np.asarray(base["scores"]) + 1.0, rtol=1e-6)

@@ -1,0 +1,52 @@
+"""GridSearch + CrossValidate (paper §3.4 Experiment variants)."""
+import numpy as np
+
+from repro.core import Extract, LTRRerank, Retrieve
+from repro.core.tuning import CrossValidate, GridSearch, kfold_splits
+
+
+def test_grid_search_shares_prefix_cache(small_ir):
+    env = small_ir
+    calls = {"n": 0}
+
+    def counting(Q, R):
+        calls["n"] += 1
+        return Q, R
+
+    from repro.core.transformer import Generic
+    probe = Generic(fn=counting)
+    base = Retrieve("BM25", k=30) >> probe
+
+    def build(alpha):
+        return alpha * base + (1 - alpha) * Retrieve("QL", k=30)
+
+    res = GridSearch(build, {"alpha": [0.2, 0.5, 0.8]},
+                     env["Q"], env["topics"].qrels, metric="map",
+                     backend=env["backend"], optimize=False)
+    assert len(res["table"]) == 3
+    assert res["best_params"]["alpha"] in (0.2, 0.5, 0.8)
+    assert 0 < res["best_score"] <= 1.0
+    assert calls["n"] == 1          # shared prefix ran ONCE across the grid
+
+
+def test_kfold_splits_partition():
+    qids = np.arange(10)
+    seen = []
+    for train, test in kfold_splits(qids, 5, seed=1):
+        assert set(train) | set(test) == set(range(10))
+        assert not (set(train) & set(test))
+        seen.extend(test.tolist())
+    assert sorted(seen) == list(range(10))
+
+
+def test_cross_validate_ltr(small_ir):
+    env = small_ir
+
+    def build():
+        return (Retrieve("BM25", k=20) >> (Extract("QL") ** Extract("TF_IDF"))
+                >> LTRRerank(n_features=2, epochs=5))
+
+    res = CrossValidate(build, env["Q"], env["topics"].qrels, k=2,
+                        metrics=["map"], backend=env["backend"])
+    assert len(res["folds"]) == 2
+    assert 0 <= res["mean"]["map"] <= 1.0
