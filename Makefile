@@ -1,0 +1,10 @@
+.PHONY: test dev-deps bench
+
+test:
+	sh scripts/ci.sh
+
+dev-deps:
+	python -m pip install -r requirements-dev.txt
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run --scale small

@@ -25,9 +25,9 @@ from pathlib import Path
 import numpy as np
 import jax
 
-from repro.core import (Experiment, Extract, FatRetrieve, PrunedRetrieve,
-                        Retrieve, optimize_pipeline)
-from repro.core.compiler import Context, JaxBackend
+from repro.core import (Experiment, ExperimentPlan, Extract, FatRetrieve,
+                        PrunedRetrieve, Retrieve, optimize_pipeline)
+from repro.core.compiler import Context, JaxBackend, run_pipeline
 from repro.core.data import make_queries
 from repro.index import build_index, synthesize_corpus, synthesize_topics
 from repro.index.corpus import ROBUST_DOCS, CLUEWEB_DOCS, expand_topics
@@ -128,6 +128,50 @@ def bench_rq2(env, k: int = 1000, repeats: int = 3) -> list[dict]:
             "feature_maxdiff": feat_diff,
         })
     return rows
+
+
+def bench_planner(env, k: int = 1000, repeats: int = 3,
+                  features=("QL", "TF_IDF", "DPH")) -> dict:
+    """Amortised shared-prefix speedup (the planner's reason to exist): N
+    pipelines sharing one retrieval prefix, executed by the trie plan
+    (prefix runs once) vs sequentially with no sharing (prefix runs N
+    times).  Steady-state wall-clock — both paths are warmed first, so JIT
+    compilation does not pollute the ratio."""
+    index = env["index"]
+    be = JaxBackend(index, default_k=k, query_chunk=8)
+    topics = env["formulations"]["T"]
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    pipes = [Retrieve("BM25", k=k) >> Extract(m) for m in features]
+
+    plan = ExperimentPlan(pipes, be, optimize=False)
+    plan.execute(Q, ctx=Context(be))               # warm-up (compile)
+    t_planned = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        plan.execute(Q, ctx=Context(be))
+        t_planned.append(time.perf_counter() - t0)
+
+    for p in pipes:                                 # warm-up sequential path
+        jax.block_until_ready(
+            run_pipeline(p, Q, backend=be, optimize=False)["scores"])
+    t_seq = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for p in pipes:                             # fresh memo: no sharing
+            jax.block_until_ready(
+                run_pipeline(p, Q, backend=be, optimize=False)["scores"])
+        t_seq.append(time.perf_counter() - t0)
+
+    nq = int(Q["qid"].shape[0])
+    return {
+        "n_pipelines": len(pipes), "k": k,
+        "stage_requests": plan.n_stage_requests,
+        "stage_executions": plan.n_stage_executions,
+        "planned_mrt_ms": round(1000 * min(t_planned) / nq, 2),
+        "sequential_mrt_ms": round(1000 * min(t_seq) / nq, 2),
+        "amortised_speedup": round(min(t_seq) / min(t_planned), 2),
+    }
 
 
 def clueweb_extrapolation(env, rq1, rq2) -> dict:

@@ -75,6 +75,18 @@ def main() -> None:
         print("\n== ClueWeb09 extrapolation ==")
         print(cw)
 
+        # --- planner: amortised shared-prefix speedup --------------------
+        pl = ir_bench.bench_planner(env, repeats=args.repeats)
+        (OUT / "planner.json").write_text(json.dumps(pl, indent=1))
+        print("\n== Planner: shared-prefix amortisation ==")
+        print(pl)
+        csv_rows.append({
+            "name": "planner_shared_prefix",
+            "us_per_call": pl["planned_mrt_ms"] * 1000,
+            "derived": (f"speedup={pl['amortised_speedup']}x,"
+                        f"stages={pl['stage_executions']}/"
+                        f"{pl['stage_requests']}")})
+
     # --- ROOF ---------------------------------------------------------------
     recs = roofline.load_records()
     for mesh in ["16x16", "2x16x16"]:

@@ -1,0 +1,7 @@
+#!/usr/bin/env sh
+# Tier-1 verification — the exact command the roadmap pins. Run from the
+# repo root. Catches environment drift (e.g. a missing test dependency
+# breaking collection) mechanically instead of at review time.
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

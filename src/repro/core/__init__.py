@@ -5,9 +5,10 @@
     pipe = Retrieve("BM25") % 10
     res = Experiment([pipe], topics, qrels, ["map"], backend=be)
 """
-from repro.core.compiler import JaxBackend, run_pipeline  # noqa: F401
+from repro.core.compiler import Context, JaxBackend, run_pipeline  # noqa: F401
 from repro.core.data import make_queries  # noqa: F401
 from repro.core.experiment import Experiment, format_table  # noqa: F401
+from repro.core.plan import ArtifactCache, ExperimentPlan  # noqa: F401
 from repro.core.rewrite import optimize_pipeline  # noqa: F401
 from repro.core.stages import (DenseRerank, Extract, FatRetrieve,  # noqa: F401
                                LTRRerank, MultiRetrieve, PrunedRetrieve,

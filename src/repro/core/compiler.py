@@ -5,10 +5,20 @@ descriptor -> execute the DAG with hash-consed result caching (identical
 sub-pipelines run once per query set — the paper's grid-search/common-prefix
 caching).  Leaf stages call jitted index ops; queries stream through in
 chunks (the DP axis of a TPU deployment).
+
+Result identity is *content-addressed*: the memo key for a node is
+``(node.key(), token)`` where ``token`` digests the actual input arrays at
+the pipeline source and is then derived structurally
+(``token' = H(node.key(), token)``) as data flows through the DAG.  See
+DESIGN.md §Planner for why ``id()``-based tokens are unsound (ids are
+recycled once arrays are garbage-collected, so a long-lived shared Context
+could serve stale results).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import weakref
 from typing import Any, Callable
 
 import jax
@@ -187,15 +197,16 @@ def _align_features(base_docs, child_docs, child_feats):
     return aligned
 
 
-# node-kind -> executor for combinators
-def _exec_then(node, ctx, Q, R):
+# node-kind -> executor for combinators; each receives the content token of
+# its input so sub-pipeline results can be memoised soundly
+def _exec_then(node, ctx, Q, R, tok):
     for child in node.children:
-        Q, R = _execute(child, ctx, Q, R)
+        Q, R, tok = _execute(child, ctx, Q, R, tok)
     return Q, R
 
 
-def _exec_linear(node, ctx, Q, R):
-    outs = [_execute(c, ctx, Q, R)[1] for c in node.children]
+def _exec_linear(node, ctx, Q, R, tok):
+    outs = [_execute(c, ctx, Q, R, tok)[1] for c in node.children]
     K = max(o["docids"].shape[1] for o in outs)
     pad = lambda o: jnp.pad(o["docids"], ((0, 0), (0, K - o["docids"].shape[1])),
                             constant_values=-1)
@@ -208,15 +219,15 @@ def _exec_linear(node, ctx, Q, R):
     return Q, {"qid": Q["qid"], "docids": d, "scores": s}
 
 
-def _exec_scale(node, ctx, Q, R):
-    Q, R1 = _execute(node.children[0], ctx, Q, R)
+def _exec_scale(node, ctx, Q, R, tok):
+    Q, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
     a = node.params["alpha"]
     return Q, {**R1, "scores": jnp.where(R1["docids"] >= 0,
                                          R1["scores"] * a, -jnp.inf)}
 
 
-def _exec_cutoff(node, ctx, Q, R):
-    Q, R1 = _execute(node.children[0], ctx, Q, R)
+def _exec_cutoff(node, ctx, Q, R, tok):
+    Q, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
     k = node.params["k"]
     out = {**R1, "docids": R1["docids"][:, :k], "scores": R1["scores"][:, :k]}
     if "features" in R1:
@@ -224,24 +235,24 @@ def _exec_cutoff(node, ctx, Q, R):
     return Q, out
 
 
-def _exec_setop(node, ctx, Q, R):
-    _, R1 = _execute(node.children[0], ctx, Q, R)
-    _, R2 = _execute(node.children[1], ctx, Q, R)
+def _exec_setop(node, ctx, Q, R, tok):
+    _, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
+    _, R2, _ = _execute(node.children[1], ctx, Q, R, tok)
     fn = _setop_union if node.params["op"] == "union" else _setop_intersect
     d, s = fn(R1["docids"], R1["scores"], R2["docids"], R2["scores"])
     return Q, {"qid": Q["qid"], "docids": d, "scores": s}
 
 
-def _exec_concat(node, ctx, Q, R):
-    _, R1 = _execute(node.children[0], ctx, Q, R)
-    _, R2 = _execute(node.children[1], ctx, Q, R)
+def _exec_concat(node, ctx, Q, R, tok):
+    _, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
+    _, R2, _ = _execute(node.children[1], ctx, Q, R, tok)
     d, s = _concat_rankings(R1["docids"], R1["scores"],
                             R2["docids"], R2["scores"])
     return Q, {"qid": Q["qid"], "docids": d, "scores": s}
 
 
-def _exec_feature_union(node, ctx, Q, R):
-    outs = [_execute(c, ctx, Q, R)[1] for c in node.children]
+def _exec_feature_union(node, ctx, Q, R, tok):
+    outs = [_execute(c, ctx, Q, R, tok)[1] for c in node.children]
     base = outs[0]
     cols = [_feature_columns(base)]
     for o in outs[1:]:
@@ -259,29 +270,97 @@ _COMBINATORS = {
 
 
 # ---------------------------------------------------------------------------
-# execution engine with hash-consed result caching
+# execution engine with content-addressed result caching
 # ---------------------------------------------------------------------------
+
+def content_token(tree) -> str:
+    """Digest of the actual array contents of a (Q, R)-like pytree.
+
+    This is the *source* token of a pipeline run: unlike ``id()``-keyed
+    tokens it cannot alias after garbage collection (CPython recycles object
+    ids), so a long-lived shared Context stays sound.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    h = hashlib.sha256(repr(treedef).encode())
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def derive_token(node_key, token_in: str) -> str:
+    """Token of a node's output: H(producing node key, input token).  Pure
+    function of pipeline structure + source content, so identical
+    sub-pipelines over the same query set share one token across pipelines,
+    Experiments, and grid-search candidates."""
+    h = hashlib.sha256(repr(node_key).encode())
+    h.update(token_in.encode())
+    return h.hexdigest()
+
 
 @dataclasses.dataclass
 class Context:
+    """Shared execution state: result memo keyed by (node key, input token),
+    plus per-node execution counters (used by the planner's exactly-once
+    tests and the benchmark's sharing report)."""
     backend: JaxBackend
     memo: dict = dataclasses.field(default_factory=dict)
+    exec_counts: dict = dataclasses.field(default_factory=dict)
+    #: strong refs to executed nodes — node keys embed id()s of non-scalar
+    #: params (e.g. Generic fns), which stay unique only while alive
+    _pins: dict = dataclasses.field(default_factory=dict)
+    #: id -> (weakref, digest): avoids re-hashing the same live arrays on
+    #: every run (grid search presents the same topics per candidate)
+    _leaf_tokens: dict = dataclasses.field(default_factory=dict)
 
-    def input_token(self, Q, R):
-        ids = tuple(id(v) for v in jax.tree.leaves((Q, R)))
-        return hash(ids)
+    def pin(self, node: Transformer) -> None:
+        self._pins[id(node)] = node
+
+    def _leaf_token(self, leaf) -> str:
+        ent = self._leaf_tokens.get(id(leaf))
+        if ent is not None and ent[0]() is leaf:
+            # identity check makes the id-keyed cache sound: a dead ref can
+            # never vouch for a recycled id
+            return ent[1]
+        a = np.asarray(leaf)
+        h = hashlib.sha256(str((a.dtype, a.shape)).encode())
+        h.update(a.tobytes())
+        tok = h.hexdigest()
+        try:
+            self._leaf_tokens[id(leaf)] = (weakref.ref(leaf), tok)
+        except TypeError:
+            pass                      # non-weakrefable leaf: just rehash
+        return tok
+
+    def source_token(self, Q, R) -> str:
+        leaves, treedef = jax.tree.flatten((Q, R))
+        h = hashlib.sha256(repr(treedef).encode())
+        for leaf in leaves:
+            h.update(self._leaf_token(leaf).encode())
+        return h.hexdigest()
 
 
-def _execute(node: Transformer, ctx: Context, Q, R):
-    token = (node.key(), ctx.input_token(Q, R))
-    if token in ctx.memo:
-        return ctx.memo[token]
+def _execute(node: Transformer, ctx: Context, Q, R, tok: str | None = None):
+    """Execute ``node`` on (Q, R); returns ``(Q', R', token')`` where
+    ``token'`` content-addresses the output."""
+    if tok is None:
+        tok = ctx.source_token(Q, R)
+    ctx.pin(node)
+    key = node.key()
+    memo_key = (key, tok)
+    hit = ctx.memo.get(memo_key)
+    if hit is not None:
+        return hit
     fn = _COMBINATORS.get(node.kind)
     if fn is not None:
-        out = fn(node, ctx, Q, R)
+        Q2, R2 = fn(node, ctx, Q, R, tok)
     else:
-        out = node.execute(ctx, Q, R)
-    ctx.memo[token] = out
+        ctx.exec_counts[key] = ctx.exec_counts.get(key, 0) + 1
+        Q2, R2 = node.execute(ctx, Q, R)
+    out = (Q2, R2, derive_token(key, tok))
+    ctx.memo[memo_key] = out
     return out
 
 
@@ -291,7 +370,7 @@ def run_pipeline(node: Transformer, Q, R=None, *, backend: JaxBackend,
     if optimize:
         node = optimize_pipeline(node, backend)
     ctx = ctx or Context(backend)
-    Q2, R2 = _execute(node, ctx, Q, R)
+    Q2, R2, _ = _execute(node, ctx, Q, R)
     return R2 if R2 is not None else Q2
 
 
@@ -301,25 +380,27 @@ def fit_pipeline(root: Transformer, Q_train, qrels_train, Q_valid,
     (Q, R) flowing into it plus qrels (paper eq. 9 semantics)."""
     ctx = Context(backend)
 
-    def walk(node, Q, R, Qv, Rv):
+    def walk(node, st, sv):
+        # st / sv: (Q, R, token) train / validation streams
         if node.kind == "then":
             for child in node.children:
-                Q, R, Qv, Rv = walk(child, Q, R, Qv, Rv)
-            return Q, R, Qv, Rv
+                st, sv = walk(child, st, sv)
+            return st, sv
         # fit children first (they feed this node)
         for child in node.children:
-            walk(child, Q, R, Qv, Rv)
-        Qo, Ro = _execute_prefit(node, ctx, Q, R)
-        Qvo, Rvo = (None, None)
-        if Qv is not None:
-            Qvo, Rvo = _execute_prefit(node, ctx, Qv, Rv)
-        return Qo, Ro, Qvo, Rvo
+            walk(child, st, sv)
+        return _execute_prefit(node, st), \
+            (_execute_prefit(node, sv) if sv is not None else None)
 
-    def _execute_prefit(node, ctx, Q, R):
+    def _execute_prefit(node, state):
+        Q, R, tok = state
         if node.stateful:
             # must fit BEFORE executing (execute needs trained state)
             node._fit_local(ctx, Q, R, qrels_train, None, None, qrels_valid)
-        return _execute(node, ctx, Q, R)
+        return _execute(node, ctx, Q, R, tok)
 
-    walk(root, Q_train, None, Q_valid, None)
+    sv0 = None
+    if Q_valid is not None:
+        sv0 = (Q_valid, None, ctx.source_token(Q_valid, None))
+    walk(root, (Q_train, None, ctx.source_token(Q_train, None)), sv0)
     return root

@@ -1,0 +1,310 @@
+"""Experiment planner: trie-based shared-prefix scheduling + artifact cache.
+
+The paper's ``Experiment`` promises that pipelines sharing a common prefix
+execute that prefix once.  This module makes the promise *structural*
+instead of accidental: the planner flattens every (rewritten) pipeline into
+its chain of top-level stages, inserts the chains into a **prefix trie**
+keyed by the stages' canonical structural keys, and schedules a depth-first
+traversal in which every trie node — i.e. every distinct shared
+sub-pipeline — executes **exactly once** per query set.  (Cf. MacAvaney &
+Macdonald on precomputation/caching in pipeline architectures, and Anu &
+Macdonald's trie-based experiment plans.)
+
+Per trie node the planner records wall-clock for a cold pass (includes JIT
+compilation) and a steady-state pass, so an Experiment's MRT decomposes
+into ``compile`` / ``execute`` / ``shared-amortised`` components instead of
+conflating compilation with retrieval.
+
+Stage outputs can additionally be spilled to an on-disk :class:`ArtifactCache`
+keyed by ``(prefix key, query-set digest, index digest)`` — all
+content-derived, so a cache directory is valid across processes.  Stages
+whose structural key embeds process-local state (``("obj", id)`` params or
+stateful uid/version markers) are never persisted.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compiler import (Context, JaxBackend, _execute, content_token,
+                                 derive_token)
+from repro.core.rewrite import optimize_pipeline
+from repro.core.transformer import Transformer
+
+
+# ---------------------------------------------------------------------------
+# canonical chains + persistent keys
+# ---------------------------------------------------------------------------
+
+def stage_chain(node: Transformer) -> list[Transformer]:
+    """A (rewritten) pipeline as its linear chain of top-level stages.
+    Nested combinators stay atomic trie entries; sharing inside them is
+    handled by the content-addressed memo."""
+    return list(node.children) if node.kind == "then" else [node]
+
+
+def _key_is_persistent(key) -> bool:
+    kind, items, state, children = key
+    if state:                       # stateful: (uid, version), process-local
+        return False
+    for _, v in items:
+        if isinstance(v, tuple) and len(v) == 2 and v[0] == "obj":
+            return False            # param keyed by object identity
+    return all(_key_is_persistent(c) for c in children)
+
+
+def persistent_key(node: Transformer) -> str | None:
+    """Cross-process digest of a stage's structural key, or None if the key
+    references process-local state and must not be written to disk."""
+    key = node.key()
+    if not _key_is_persistent(key):
+        return None
+    return hashlib.sha256(repr(key).encode()).hexdigest()
+
+
+def backend_digest(backend: JaxBackend) -> str:
+    """Content digest of the backend's result-affecting state: the index
+    arrays plus the execution config stages resolve at run time (default_k
+    for Retrieve(k=None), the dense embeddings and query projection for
+    DenseRerank / embed_queries).  Cached — all of it is immutable once the
+    backend is built."""
+    dig = getattr(backend, "_content_digest", None)
+    if dig is None:
+        dig = content_token((backend.index, backend.default_k,
+                             backend.dense.emb, backend._qproj))
+        backend._content_digest = dig
+    return dig
+
+
+# ---------------------------------------------------------------------------
+# on-disk artifact cache
+# ---------------------------------------------------------------------------
+
+class ArtifactCache:
+    """Stage-output store: one ``.npz`` per (prefix, query set, index) key,
+    holding the stage's (Q, R) output arrays."""
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self.path.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _file(self, key: str) -> Path:
+        return self.path / f"{key}.npz"
+
+    def load(self, key: str):
+        f = self._file(key)
+        if not f.exists():
+            self.misses += 1
+            return None
+        try:
+            with np.load(f) as z:
+                meta = json.loads(z["__meta__"].item())
+                out = []
+                for part in ("Q", "R"):
+                    if meta[part] is None:
+                        out.append(None)
+                    else:
+                        out.append({k: jnp.asarray(z[f"{part}.{k}"])
+                                    for k in meta[part]})
+        except Exception:
+            # corrupt / truncated / foreign file: a cache must degrade to
+            # recompute, never take the experiment down
+            f.unlink(missing_ok=True)
+            self.misses += 1
+            return None
+        self.hits += 1
+        return tuple(out)
+
+    def store(self, key: str, Q, R) -> None:
+        arrays, meta = {}, {}
+        for part, d in (("Q", Q), ("R", R)):
+            meta[part] = None if d is None else sorted(d)
+            if d is not None:
+                for k, v in d.items():
+                    arrays[f"{part}.{k}"] = np.asarray(v)
+        # per-writer tmp name (concurrent processes may store the same key),
+        # .npz suffix so savez keeps the name; then atomic publish
+        tmp = self.path / f"{key}.{os.getpid()}.tmp.npz"
+        np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+        tmp.replace(self._file(key))
+
+
+# ---------------------------------------------------------------------------
+# the plan trie
+# ---------------------------------------------------------------------------
+
+class PlanNode:
+    """One trie node = one stage execution, shared by every pipeline whose
+    chain passes through this prefix."""
+
+    __slots__ = ("stage", "parent", "children", "pipelines", "persist",
+                 "cold_s", "warm_s", "cache_hit")
+
+    def __init__(self, stage: Transformer | None, parent: "PlanNode | None"):
+        self.stage = stage
+        self.parent = parent
+        self.children: dict = {}        # stage.key() -> PlanNode
+        self.pipelines: list[int] = []  # pipeline indices sharing this prefix
+        self.persist: str | None = None # cross-process prefix digest
+        self.cold_s: float | None = None
+        self.warm_s: float | None = None
+        self.cache_hit = False
+
+    @property
+    def n_shared(self) -> int:
+        return len(self.pipelines)
+
+    @property
+    def depth(self) -> int:
+        d, n = 0, self
+        while n.parent is not None:
+            d, n = d + 1, n.parent
+        return d
+
+    def label(self) -> str:
+        return type(self.stage).__name__ if self.stage is not None else "<root>"
+
+
+class ExperimentPlan:
+    """Shared-prefix execution plan over a set of pipelines.
+
+    ``execute`` runs every trie node exactly once per call (depth-first, so
+    intermediate results die as soon as the last sibling consumed them) and
+    returns the per-pipeline final results in input order.
+    """
+
+    def __init__(self, pipelines: Sequence[Transformer], backend: JaxBackend,
+                 *, optimize: bool = True):
+        self.backend = backend
+        self.pipelines = list(pipelines)
+        #: per-pipeline rewrite traces [(rule, before, after), ...]
+        self.traces: list[list] = [[] for _ in self.pipelines]
+        self.chains = [
+            stage_chain(optimize_pipeline(p, backend, trace=self.traces[i])
+                        if optimize else p)
+            for i, p in enumerate(self.pipelines)]
+        self.root = PlanNode(None, None)
+        self.root.persist = "root"
+        self._leaves: list[PlanNode] = []
+        for i, chain in enumerate(self.chains):
+            cur = self.root
+            cur.pipelines.append(i)
+            for stage in chain:
+                nxt = cur.children.get(stage.key())
+                if nxt is None:
+                    nxt = PlanNode(stage, cur)
+                    pk = persistent_key(stage)
+                    if pk is not None and cur.persist is not None:
+                        nxt.persist = hashlib.sha256(
+                            (cur.persist + pk).encode()).hexdigest()
+                    cur.children[stage.key()] = nxt
+                nxt.pipelines.append(i)
+                cur = nxt
+            self._leaves.append(cur)
+
+    # -- structure ----------------------------------------------------------
+    def nodes(self) -> list[PlanNode]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            if n.stage is not None:
+                out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    @property
+    def n_stage_executions(self) -> int:
+        """Stages the plan will execute (vs sum(len(chain)) without sharing)."""
+        return len(self.nodes())
+
+    @property
+    def n_stage_requests(self) -> int:
+        return sum(len(c) for c in self.chains)
+
+    # -- execution ----------------------------------------------------------
+    def execute(self, Q, *, ctx: Context | None = None,
+                cache: ArtifactCache | None = None,
+                record: str | None = "cold") -> list:
+        ctx = ctx or Context(self.backend)
+        qtok = ctx.source_token(Q, None)
+        idx_dig = backend_digest(self.backend) if cache is not None else None
+        results: list = [None] * len(self._leaves)
+        leaf_index: dict[int, list[int]] = {}
+        for i, leaf in enumerate(self._leaves):   # duplicates share one leaf
+            leaf_index.setdefault(id(leaf), []).append(i)
+
+        def run_stage(child: PlanNode, Qi, Ri, toki):
+            ck = loaded = None
+            if cache is not None and child.persist is not None:
+                ck = hashlib.sha256(
+                    f"{child.persist}:{qtok}:{idx_dig}".encode()).hexdigest()
+                loaded = cache.load(ck)
+            t0 = time.perf_counter()
+            if loaded is not None:
+                Qo, Ro = loaded
+                toko = derive_token(child.stage.key(), toki)
+                # seed the memo so non-plan users of this ctx share too
+                ctx.memo[(child.stage.key(), toki)] = (Qo, Ro, toko)
+                child.cache_hit = True
+            else:
+                Qo, Ro, toko = _execute(child.stage, ctx, Qi, Ri, toki)
+                jax.block_until_ready((Qo, Ro))
+                child.cache_hit = False
+                if ck is not None:
+                    cache.store(ck, Qo, Ro)
+            dt = time.perf_counter() - t0
+            if record == "warm":
+                child.warm_s = dt
+            elif record == "cold":
+                child.cold_s = dt
+            return Qo, Ro, toko
+
+        def visit(node: PlanNode, Qi, Ri, toki) -> None:
+            for i in leaf_index.get(id(node), ()):
+                results[i] = Ri if Ri is not None else Qi
+            for child in node.children.values():
+                visit(child, *run_stage(child, Qi, Ri, toki))
+
+        visit(self.root, Q, None, qtok)
+        return results
+
+    # -- timing attribution --------------------------------------------------
+    def pipeline_times(self, i: int) -> dict:
+        """Decomposed wall-clock for pipeline ``i``: steady execution,
+        compile (cold - steady), and the sharing-amortised steady time in
+        which each stage's cost is split across the pipelines using it."""
+        steady = compile_ = amortised = 0.0
+        node = self._leaves[i]
+        while node is not None and node.stage is not None:
+            warm = node.warm_s if node.warm_s is not None else (node.cold_s or 0.0)
+            cold = node.cold_s if node.cold_s is not None else warm
+            steady += warm
+            compile_ += max(0.0, cold - warm)
+            amortised += warm / max(node.n_shared, 1)
+            node = node.parent
+        return {"steady_s": steady, "compile_s": compile_,
+                "amortised_s": amortised}
+
+    def stage_stats(self) -> list[dict]:
+        """Per-trie-node report (one row per *executed* stage)."""
+        rows = []
+        for n in sorted(self.nodes(), key=lambda n: (n.depth, n.label())):
+            warm = n.warm_s if n.warm_s is not None else n.cold_s
+            row = {"stage": n.label(), "depth": n.depth,
+                   "n_pipelines": n.n_shared, "cache_hit": n.cache_hit,
+                   "cold_ms": None if n.cold_s is None else 1000 * n.cold_s,
+                   "steady_ms": None if warm is None else 1000 * warm}
+            if n.cold_s is not None and n.warm_s is not None:
+                row["compile_ms"] = 1000 * max(0.0, n.cold_s - n.warm_s)
+            rows.append(row)
+        return rows

@@ -52,9 +52,11 @@ class Transformer:
         return f"{type(self).__name__}({inner})"
 
     # -- execution ----------------------------------------------------------
-    def transform(self, Q, R=None, *, backend=None, optimize: bool = True):
+    def transform(self, Q, R=None, *, backend=None, optimize: bool = True,
+                  ctx=None):
         from repro.core.compiler import run_pipeline
-        return run_pipeline(self, Q, R, backend=backend, optimize=optimize)
+        return run_pipeline(self, Q, R, backend=backend, optimize=optimize,
+                            ctx=ctx)
 
     def __call__(self, Q, R=None, **kw):
         return self.transform(Q, R, **kw)

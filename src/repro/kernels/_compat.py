@@ -1,0 +1,12 @@
+"""Version-compat shims for the pinned accelerator stack.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across JAX releases; resolve whichever the installed
+version exposes so kernels never hard-code either name.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 DEFAULT_BQ = 512
 DEFAULT_BKV = 512
 NEG = -1e30
@@ -115,7 +117,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, chunk: int = 0,
             pltpu.VMEM((bq,), jnp.float32),      # l: running denominator
             pltpu.VMEM((bq, D), jnp.float32),    # acc: running numerator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

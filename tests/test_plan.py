@@ -1,0 +1,258 @@
+"""Planner subsystem: exactly-once shared prefixes, sound cache tokens,
+plan-vs-sequential equality, MRT decomposition, artifact cache."""
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core import (DenseRerank, Experiment, Extract, ExperimentPlan,
+                        ArtifactCache, Retrieve, RM3Expand, SDMRewrite)
+from repro.core.compiler import Context, content_token
+from repro.core.data import make_queries
+from repro.core.transformer import Generic
+
+
+def _counting_probe():
+    calls = {"n": 0}
+
+    def fn(Q, R):
+        calls["n"] += 1
+        return Q, R
+
+    return Generic(fn=fn), calls
+
+
+# ---------------------------------------------------------------------------
+# exactly-once shared-prefix execution
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_executes_exactly_once(small_ir):
+    """BM25 >> A and BM25 >> B must run BM25 (and the probe) once."""
+    env = small_ir
+    probe, calls = _counting_probe()
+    base = Retrieve("BM25", k=10) >> probe
+    p1 = base >> Extract("QL")
+    p2 = base >> Extract("TF_IDF")
+    ctx = Context(env["backend"])
+    plan = ExperimentPlan([p1, p2], env["backend"], optimize=False)
+    plan.execute(env["Q"], ctx=ctx)
+    assert calls["n"] == 1
+    # Retrieve executed once despite 2 pipelines requesting it
+    ret_key = Retrieve("BM25", k=10).key()
+    assert ctx.exec_counts[ret_key] == 1
+    assert plan.n_stage_executions == 4       # BM25, probe, 2x Extract
+    assert plan.n_stage_requests == 6
+
+
+def test_plan_trie_shares_structurally_equal_stages(small_ir):
+    """Sharing keys off canonical stage keys, not object identity: separately
+    constructed Retrieve("BM25") nodes land on one trie node."""
+    env = small_ir
+    p1 = Retrieve("BM25", k=10) >> Extract("QL")
+    p2 = Retrieve("BM25", k=10) >> Extract("TF_IDF")
+    ctx = Context(env["backend"])
+    plan = ExperimentPlan([p1, p2], env["backend"], optimize=False)
+    plan.execute(env["Q"], ctx=ctx)
+    assert ctx.exec_counts[Retrieve("BM25", k=10).key()] == 1
+
+
+def test_three_way_trie_fanout(small_ir):
+    env = small_ir
+    pipes = [Retrieve("BM25", k=20) % 5,
+             Retrieve("BM25", k=20) >> DenseRerank(alpha=0.5),
+             Retrieve("BM25", k=20) >> Extract("QL")]
+    ctx = Context(env["backend"])
+    plan = ExperimentPlan(pipes, env["backend"], optimize=False)
+    res = plan.execute(env["Q"], ctx=ctx)
+    assert len(res) == 3
+    assert ctx.exec_counts[Retrieve("BM25", k=20).key()] == 1
+
+
+# ---------------------------------------------------------------------------
+# cache-token soundness
+# ---------------------------------------------------------------------------
+
+def test_tokens_are_content_addressed(small_ir):
+    """Same content in fresh arrays -> same token; different content ->
+    different token.  (The old id()-keyed scheme gave neither guarantee.)"""
+    ctx = Context(small_ir["backend"])
+    terms = np.array([[1, 2, 3]], np.int32)
+    Q1 = make_queries(terms)
+    Q2 = make_queries(terms.copy())
+    Q3 = make_queries(np.array([[4, 5, 6]], np.int32))
+    assert ctx.source_token(Q1, None) == ctx.source_token(Q2, None)
+    assert ctx.source_token(Q1, None) != ctx.source_token(Q3, None)
+
+
+def test_memo_survives_gc_pressure(small_ir):
+    """A shared Context must stay correct when query arrays are collected
+    and their ids recycled by new arrays with different content."""
+    env = small_ir
+    be = env["backend"]
+    ctx = Context(be)
+    pipe = Retrieve("BM25", k=10)
+    terms = np.asarray(env["Q"]["terms"])[:, :3]
+
+    Q1 = make_queries(terms)
+    R1 = pipe.transform(Q1, backend=be, optimize=False, ctx=ctx)
+    R1_docs = np.asarray(R1["docids"]).copy()
+    del Q1, R1
+    gc.collect()
+    # churn allocations so CPython recycles the freed object ids
+    decoys = [make_queries(np.roll(terms, s, axis=1)) for s in range(1, 4)]
+    Q2 = make_queries(terms[::-1].copy())        # different content
+    R2 = pipe.transform(Q2, backend=be, optimize=False, ctx=ctx)
+    ref = pipe.transform(Q2, backend=be, optimize=False, ctx=Context(be))
+    np.testing.assert_array_equal(np.asarray(R2["docids"]),
+                                  np.asarray(ref["docids"]))
+    # and re-presenting the original content still hits the memo
+    n0 = ctx.exec_counts[pipe.key()]
+    Q1b = make_queries(terms.copy())
+    R1b = pipe.transform(Q1b, backend=be, optimize=False, ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(R1b["docids"]), R1_docs)
+    assert ctx.exec_counts[pipe.key()] == n0     # memo hit, no re-execution
+
+
+# ---------------------------------------------------------------------------
+# plan vs sequential equality (the test_system pipelines)
+# ---------------------------------------------------------------------------
+
+def test_plan_matches_sequential_results(small_ir):
+    env = small_ir
+    pipes = [
+        Retrieve("BM25", k=30),
+        Retrieve("QL", k=30),
+        Retrieve("BM25", k=30) >> RM3Expand(fb_terms=5, fb_docs=5)
+        >> Retrieve("BM25", k=30),
+        SDMRewrite() >> Retrieve("BM25", k=10),
+        Retrieve("BM25", k=20) >> DenseRerank(alpha=0.5),
+    ]
+    for optimize in (False, True):
+        planned = Experiment(pipes, env["Q"], env["topics"].qrels, ["map"],
+                             backend=env["backend"], optimize=optimize,
+                             plan=True)
+        seq = Experiment(pipes, env["Q"], env["topics"].qrels, ["map"],
+                         backend=env["backend"], optimize=optimize,
+                         plan=False)
+        for Rp, Rs in zip(planned["results"], seq["results"]):
+            np.testing.assert_array_equal(np.asarray(Rp["docids"]),
+                                          np.asarray(Rs["docids"]))
+            np.testing.assert_allclose(np.asarray(Rp["scores"]),
+                                       np.asarray(Rs["scores"]), rtol=1e-6)
+        for rp, rs in zip(planned["table"], seq["table"]):
+            np.testing.assert_allclose(rp["map"], rs["map"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MRT decomposition
+# ---------------------------------------------------------------------------
+
+def test_mrt_decomposes_compile_and_steady(small_ir):
+    env = small_ir
+    res = Experiment([Retrieve("BM25", k=30), Retrieve("QL", k=30)],
+                     env["Q"], env["topics"].qrels, ["map"],
+                     backend=env["backend"], measure_time=True)
+    for row in res["table"]:
+        assert row["mrt_ms"] > 0
+        assert row["compile_ms"] >= 0
+        assert 0 < row["mrt_shared_ms"] <= row["mrt_ms"] + 1e-9
+    st = res["stage_table"]
+    assert all(r["steady_ms"] is not None for r in st)
+    # stage attribution covers both pipelines
+    assert {r["n_pipelines"] for r in st} == {1}
+
+
+def test_mrt_shared_amortises(small_ir):
+    """With a shared prefix, amortised MRT must be below full-path MRT."""
+    env = small_ir
+    base = Retrieve("BM25", k=20)
+    res = Experiment([base >> Extract("QL"), base >> Extract("TF_IDF")],
+                     env["Q"], env["topics"].qrels, ["map"],
+                     backend=env["backend"], optimize=False,
+                     measure_time=True)
+    for row in res["table"]:
+        assert row["mrt_shared_ms"] < row["mrt_ms"]
+
+
+# ---------------------------------------------------------------------------
+# on-disk artifact cache
+# ---------------------------------------------------------------------------
+
+def test_artifact_cache_roundtrip(small_ir, tmp_path):
+    env = small_ir
+    pipes = [Retrieve("BM25", k=20) >> Extract("QL"),
+             Retrieve("BM25", k=20) >> Extract("TF_IDF")]
+    cache = ArtifactCache(tmp_path / "artifacts")
+    r1 = Experiment(pipes, env["Q"], env["topics"].qrels, ["map"],
+                    backend=env["backend"], optimize=False,
+                    artifact_cache=cache)
+    assert cache.hits == 0 and cache.misses > 0
+    # second run: every persistable stage comes from disk, nothing executes
+    cache2 = ArtifactCache(tmp_path / "artifacts")
+    ctx = Context(env["backend"])
+    plan = ExperimentPlan(pipes, env["backend"], optimize=False)
+    res2 = plan.execute(env["Q"], ctx=ctx, cache=cache2)
+    assert cache2.hits == plan.n_stage_executions
+    assert not ctx.exec_counts                      # zero stage executions
+    for Ra, Rb in zip(r1["results"], res2):
+        np.testing.assert_array_equal(np.asarray(Ra["docids"]),
+                                      np.asarray(Rb["docids"]))
+        np.testing.assert_allclose(np.asarray(Ra["features"]),
+                                   np.asarray(Rb["features"]), rtol=1e-6)
+
+
+def test_artifact_cache_keys_on_query_content(small_ir, tmp_path):
+    """A different query set must miss the cache, not alias."""
+    env = small_ir
+    pipe = [Retrieve("BM25", k=10)]
+    cache = ArtifactCache(tmp_path / "a")
+    Experiment(pipe, env["Q"], env["topics"].qrels, ["map"],
+               backend=env["backend"], artifact_cache=cache)
+    other = make_queries(np.asarray(env["Q"]["terms"])[:4])
+    plan = ExperimentPlan(pipe, env["backend"])
+    res = plan.execute(other, ctx=Context(env["backend"]), cache=cache)
+    assert cache.hits == 0                           # no false sharing
+    assert np.asarray(res[0]["docids"]).shape[0] == 4
+
+
+def test_duplicate_pipelines_share_one_leaf(small_ir):
+    """Experiment([p, p]) must fill a result for both rows, not None."""
+    env = small_ir
+    p = Retrieve("BM25", k=15)
+    res = Experiment([p, p], env["Q"], env["topics"].qrels, ["map"],
+                     backend=env["backend"])
+    assert res["plan"].n_stage_executions == 1
+    assert all(r is not None for r in res["results"])
+    np.testing.assert_array_equal(np.asarray(res["results"][0]["docids"]),
+                                  np.asarray(res["results"][1]["docids"]))
+
+
+def test_artifact_cache_keys_on_backend_config(small_ir, tmp_path):
+    """Retrieve(k=None) resolves k from backend.default_k at run time; two
+    backends over the same index but different default_k must not share
+    artifacts."""
+    from repro.core.compiler import JaxBackend
+    env = small_ir
+    cache = ArtifactCache(tmp_path / "b")
+    pipe = [Retrieve("BM25")]
+    be40 = JaxBackend(env["index"], default_k=40, query_chunk=4,
+                      dense=env["backend"].dense)
+    be20 = JaxBackend(env["index"], default_k=20, query_chunk=4,
+                      dense=env["backend"].dense)
+    r1 = ExperimentPlan(pipe, be40).execute(env["Q"], cache=cache)
+    r2 = ExperimentPlan(pipe, be20).execute(env["Q"], cache=cache)
+    assert cache.hits == 0                       # no cross-config aliasing
+    assert np.asarray(r1[0]["docids"]).shape[1] == 40
+    assert np.asarray(r2[0]["docids"]).shape[1] == 20
+
+
+def test_stateful_and_object_stages_never_persisted(small_ir, tmp_path):
+    """Stages keyed by process-local state must not be written to disk."""
+    env = small_ir
+    probe, _ = _counting_probe()
+    pipes = [Retrieve("BM25", k=10) >> probe]
+    cache = ArtifactCache(tmp_path / "c")
+    plan = ExperimentPlan(pipes, env["backend"], optimize=False)
+    plan.execute(env["Q"], ctx=Context(env["backend"]), cache=cache)
+    files = list((tmp_path / "c").glob("*.npz"))
+    assert len(files) == 1       # the Retrieve prefix only, not the Generic
