@@ -1,7 +1,11 @@
-.PHONY: test dev-deps bench
+.PHONY: test lint dev-deps bench
 
+# lint + tier-1 pytest — the same entrypoint GitHub CI runs
 test:
 	sh scripts/ci.sh
+
+lint:
+	sh scripts/lint.sh
 
 dev-deps:
 	python -m pip install -r requirements-dev.txt

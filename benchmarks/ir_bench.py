@@ -26,9 +26,11 @@ import numpy as np
 import jax
 
 from repro.core import (Experiment, ExperimentPlan, Extract, FatRetrieve,
-                        PrunedRetrieve, Retrieve, optimize_pipeline)
+                        PrunedRetrieve, Retrieve, ShardedQueryEngine,
+                        optimize_pipeline)
 from repro.core.compiler import Context, JaxBackend, run_pipeline
 from repro.core.data import make_queries
+from repro.launch.mesh import make_query_mesh
 from repro.index import build_index, synthesize_corpus, synthesize_topics
 from repro.index.corpus import ROBUST_DOCS, CLUEWEB_DOCS, expand_topics
 
@@ -172,6 +174,93 @@ def bench_planner(env, k: int = 1000, repeats: int = 3,
         "sequential_mrt_ms": round(1000 * min(t_seq) / nq, 2),
         "amortised_speedup": round(min(t_seq) / min(t_planned), 2),
     }
+
+
+#: serving-profile bucket ladder: large steady-state chunks amortise
+#: dispatch; three rungs bound recompilation at 3 variants per stage
+ENGINE_BENCH_LADDER = (16, 64, 128)
+
+ENGINE_WORKLOADS = {
+    # multi-model retrieval at the paper's default depth (Table 3 config)
+    "experiment_k1000": {
+        "pipes": lambda: [Retrieve("BM25", k=1000), Retrieve("QL", k=1000),
+                          Retrieve("TF_IDF", k=1000)],
+        "optimize": False,
+    },
+    # the RQ1-optimised serving path: % 10 rewritten to PrunedRetrieve
+    "serving_pruned_k10": {
+        "pipes": lambda: [Retrieve("BM25") % 10, Retrieve("QL") % 10],
+        "optimize": True,
+    },
+}
+
+
+def bench_engine_scaling(env, device_counts=(1, 2, 4, 8), repeats: int = 5,
+                         n_queries: int = 256) -> dict:
+    """Queries/sec scaling of the sharded bucketed engine across local
+    devices, against the single-device sequential path (the seed's chunked
+    ``vmap_queries`` loop plus the planner's per-stage barriers), over
+    experiment plans.  Also reports per-stage recompile counts, which the
+    bucket ladder must bound.
+
+    Device-parallel speedup saturates at min(host cores, devices) on the
+    forced-host-platform simulation — the ``host_cpus`` field gives the
+    context for the reported ratios.  Simulated devices must exist before
+    jax initialises, so run through ``python -m benchmarks.engine_bench``
+    (it sets ``XLA_FLAGS=--xla_force_host_platform_device_count`` first)."""
+    import os
+
+    index = env["index"]
+    topics = env["formulations"]["T"]
+    terms = np.asarray(topics.terms)
+    reps = n_queries // terms.shape[0] + 1
+    Q = make_queries(np.tile(terms, (reps, 1))[:n_queries],
+                     np.tile(np.asarray(topics.weights), (reps, 1))[:n_queries])
+
+    def time_plan(pipes, optimize, be, record):
+        plan = ExperimentPlan(pipes, be, optimize=optimize)
+        res = plan.execute(Q, ctx=Context(be), record=record)   # compile
+        jax.block_until_ready(res)
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = plan.execute(Q, ctx=Context(be), record=record)
+            jax.block_until_ready(res)
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    n_local = jax.local_device_count()
+    be_seq = JaxBackend(index, default_k=1000, query_chunk=8, sharded=False)
+    out = {"n_queries": n_queries, "simulated_devices": n_local,
+           "host_cpus": os.cpu_count(),
+           "bucket_ladder": list(ENGINE_BENCH_LADDER), "workloads": {}}
+    for name, wl in ENGINE_WORKLOADS.items():
+        pipes = wl["pipes"]()
+        work = n_queries * len(pipes)
+        # baseline: the seed's execution path verbatim — sequential chunked
+        # vmap on device 0, block_until_ready at every stage boundary
+        t_seq = time_plan(pipes, wl["optimize"], be_seq, record="cold")
+        rows = []
+        for nd in sorted({min(d, n_local) for d in device_counts}):
+            eng = ShardedQueryEngine(make_query_mesh(max_devices=nd),
+                                     ladder=ENGINE_BENCH_LADDER)
+            be = JaxBackend(index, default_k=1000, query_chunk=8,
+                            dense=be_seq.dense, engine=eng)
+            t = time_plan(pipes, wl["optimize"], be, record=None)  # async
+            rows.append({
+                "devices": nd,
+                "qps": round(work / t, 1),
+                "speedup_vs_sequential": round(t_seq / t, 2),
+                "max_recompiles_per_stage": eng.max_compiles_per_stage(),
+                "recompiles_bounded": (eng.max_compiles_per_stage()
+                                       <= len(eng.ladder)),
+            })
+        out["workloads"][name] = {
+            "n_pipelines": len(pipes),
+            "sequential_qps": round(work / t_seq, 1),
+            "rows": rows,
+        }
+    return out
 
 
 def clueweb_extrapolation(env, rq1, rq2) -> dict:

@@ -14,11 +14,31 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 from pathlib import Path
 
 from benchmarks import ir_bench, kernel_bench, roofline
 
 OUT = Path("experiments/bench")
+
+
+def run_engine_bench(scale: str, repeats: int, devices: int = 8) -> dict | None:
+    """Device-sharded engine scaling, in a subprocess: the simulated-device
+    XLA flag must be set before jax initialises, which this (already
+    jax-initialised) process can no longer do."""
+    out = OUT / "engine_scaling.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.engine_bench",
+           "--devices", str(devices), "--scale", scale,
+           "--repeats", str(repeats), "--out", str(out)]
+    proc = subprocess.run(cmd, env=env)
+    if proc.returncode != 0 or not out.exists():
+        print("# engine scaling bench failed; see output above")
+        return None
+    return json.loads(out.read_text())
 
 
 def main() -> None:
@@ -87,6 +107,32 @@ def main() -> None:
                         f"stages={pl['stage_executions']}/"
                         f"{pl['stage_requests']}")})
 
+    # --- ENGINE: device-sharded query throughput -------------------------
+    if not args.skip_ir:
+        eng = run_engine_bench(args.scale, args.repeats)
+        if eng is not None:
+            print("\n== Engine: device-sharded scaling ==")
+            print(f"(host cpus: {eng['host_cpus']}; device speedup "
+                  f"saturates at host cores)")
+            n_ladder = len(eng["bucket_ladder"])
+            for name, wl in eng["workloads"].items():
+                print(f"[{name}] sequential: {wl['sequential_qps']} q/s")
+                csv_rows.append({
+                    "name": f"engine_{name}_sequential",
+                    "us_per_call": round(1e6 / max(wl["sequential_qps"],
+                                                   1e-9), 2),
+                    "derived": ""})
+                for row in wl["rows"]:
+                    print(f"  {row}")
+                    csv_rows.append({
+                        "name": f"engine_{name}_{row['devices']}dev",
+                        "us_per_call": round(1e6 / max(row["qps"], 1e-9), 2),
+                        "derived": (f"qps={row['qps']},"
+                                    f"speedup={row['speedup_vs_sequential']}x,"
+                                    f"recompiles="
+                                    f"{row['max_recompiles_per_stage']}"
+                                    f"<=ladder={n_ladder}")})
+
     # --- ROOF ---------------------------------------------------------------
     recs = roofline.load_records()
     for mesh in ["16x16", "2x16x16"]:
@@ -101,6 +147,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in csv_rows:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+    # one merged artifact for CI's per-push bench trajectory (BENCH_<sha>)
+    summary = {"scale": args.scale, "rows": csv_rows}
+    for f in OUT.glob("*.json"):
+        if f.name != "summary.json":
+            summary[f.stem] = json.loads(f.read_text())
+    (OUT / "summary.json").write_text(json.dumps(summary, indent=1))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 #!/usr/bin/env sh
-# Tier-1 verification — the exact command the roadmap pins. Run from the
-# repo root. Catches environment drift (e.g. a missing test dependency
-# breaking collection) mechanically instead of at review time.
+# Tier-1 verification — lint, then the exact pytest command the roadmap
+# pins. Run from the repo root. Local `make test` and GitHub CI both enter
+# here, so environment drift (missing test dependency, lint regression)
+# surfaces mechanically instead of at review time.
 set -eu
 cd "$(dirname "$0")/.."
+sh scripts/lint.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

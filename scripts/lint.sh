@@ -1,0 +1,13 @@
+#!/usr/bin/env sh
+# Lint gate (ruff, pinned in requirements-dev.txt). Degrades to a warning
+# where ruff is not installed (e.g. the baked runtime image) so the tier-1
+# entrypoint still runs everywhere; GitHub CI always installs it.
+set -eu
+cd "$(dirname "$0")/.."
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+elif python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check .
+else
+    echo "lint skipped: ruff not installed (python -m pip install -r requirements-dev.txt)" >&2
+fi

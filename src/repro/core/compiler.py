@@ -18,17 +18,15 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import weakref
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common import cdiv
-from repro.core import data as D
-from repro.core.transformer import (Concat, Cutoff, FeatureUnion, Linear,
-                                    Scale, SetOp, Then, Transformer)
+from repro.core.engine import ShardedQueryEngine
+from repro.core.transformer import Transformer
 from repro.index.dense import DenseIndex, build_dense_index
 from repro.index.inverted import BLOCK, InvertedIndex
 
@@ -39,7 +37,7 @@ from repro.index.inverted import BLOCK, InvertedIndex
 
 class JaxBackend:
     """Execution backend over the JAX-native index (capability descriptor +
-    chunked-vmap query streaming + query embedding)."""
+    sharded bucketed query execution + query embedding)."""
 
     #: capabilities consulted by the rewrite rules (paper §4: BMW cutoff on
     #: Anserini; fat postings on Terrier — our backend supports all)
@@ -48,7 +46,10 @@ class JaxBackend:
     def __init__(self, index: InvertedIndex, dense: DenseIndex | None = None,
                  *, default_k: int = 1000, query_chunk: int = 16,
                  stop_df_fraction: float = 0.1,
-                 capabilities: frozenset | None = None, seed: int = 0):
+                 capabilities: frozenset | None = None, seed: int = 0,
+                 sharded: bool | None = None,
+                 engine: ShardedQueryEngine | None = None,
+                 bucket_ladder=None):
         self.index = index
         self.default_k = min(default_k, index.n_docs)
         self.query_chunk = query_chunk
@@ -65,12 +66,28 @@ class JaxBackend:
         self._qproj = jnp.asarray(
             rng.standard_normal((index.vocab, self.dense.dim)).astype(np.float32)
             / np.sqrt(self.dense.dim))
-        self._jit_cache: dict[Any, Callable] = {}
+        # sharded engine is the default execution path; REPRO_ENGINE=sequential
+        # (or sharded=False) preserves the seed's single-device chunked loop
+        if sharded is None:
+            sharded = os.environ.get("REPRO_ENGINE", "sharded") != "sequential"
+        self.engine = (engine if engine is not None
+                       else ShardedQueryEngine(ladder=bucket_ladder)
+                       if sharded else None)
 
-    # -- chunked vmap over the query axis ---------------------------------
-    def vmap_queries(self, fn, Q, *extra):
-        """vmap ``fn(terms, weights, *extra_i)`` over queries, in chunks.
-        If Q is None, ``fn(*extra_i)`` is mapped over the extra arrays."""
+    # -- query-axis execution ----------------------------------------------
+    def vmap_queries(self, fn, Q, *extra, key=None):
+        """vmap ``fn(terms, weights, *extra_i)`` over queries.  If Q is None,
+        ``fn(*extra_i)`` is mapped over the extra arrays.  Routed through the
+        sharded bucketed engine when one is attached (the default); ``key``
+        (a stage's structural key) names the engine's persistent jit-cache
+        entry.  Falls back to the sequential single-device chunked loop."""
+        if self.engine is not None:
+            return self.engine.map_queries(fn, Q, *extra, key=key)
+        return self.vmap_queries_sequential(fn, Q, *extra)
+
+    def vmap_queries_sequential(self, fn, Q, *extra):
+        """The seed's single-device chunked-vmap loop, kept as the engine's
+        baseline (benchmarks) and escape hatch (REPRO_ENGINE=sequential)."""
         args = ((Q["terms"], Q["weights"]) if Q is not None else ()) + extra
         nq = args[0].shape[0]
         c = min(self.query_chunk, nq)

@@ -258,7 +258,11 @@ class ExperimentPlan:
                 child.cache_hit = True
             else:
                 Qo, Ro, toko = _execute(child.stage, ctx, Qi, Ri, toki)
-                jax.block_until_ready((Qo, Ro))
+                # barrier only at stage boundaries the caller needs timed
+                # (or persisted); untimed runs stay fully async so chunk
+                # dispatch pipelines across stage and pipeline boundaries
+                if record is not None or ck is not None:
+                    jax.block_until_ready((Qo, Ro))
                 child.cache_hit = False
                 if ck is not None:
                     cache.store(ck, Qo, Ro)

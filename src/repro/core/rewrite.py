@@ -56,13 +56,41 @@ def cutoff_merge(node, backend):
     return None
 
 
+def _out_kind(node: Transformer) -> str:
+    """Primary output stream of an expression.  A Then of pure query
+    rewrites is itself Q -> Q; any R-producing child makes it "R"."""
+    if isinstance(node, Then):
+        return ("Q" if all(_out_kind(c) == "Q" for c in node.children)
+                else "R")
+    return node.out_kind
+
+
+def _reads_results(node: Transformer) -> bool:
+    if isinstance(node, Then):
+        return any(_reads_results(c) for c in node.children)
+    return node.reads_results
+
+
 @rule("cutoff_into_then")
 def cutoff_into_then(node, backend):
-    if isinstance(node, Cutoff) and isinstance(node.children[0], Then):
-        then = node.children[0]
-        last = Cutoff(children=[then.children[-1]], k=node.params["k"])
-        return Then(children=[*then.children[:-1], last])
-    return None
+    """(A >> B) % K -> A >> (B % K), guarded on B's output kind: a rank
+    cutoff is only typed for R-producing expressions.  Trailing Q -> Q
+    rewrites that never read R (SDM, stemming) are hopped over — sound,
+    they cannot observe the truncation — so the cutoff lands on the last
+    R-producing stage and stays eligible for the RQ1 pushdown.  An
+    R-*reading* query rewrite (RM3 reads fb_docs from R) blocks the push:
+    it must see the untruncated result list, and wrapping it in a Cutoff
+    would type a % K against a Q -> Q stage (the unsound pre-fix form)."""
+    if not (isinstance(node, Cutoff) and isinstance(node.children[0], Then)):
+        return None
+    kids = list(node.children[0].children)
+    i = len(kids) - 1
+    while i >= 0 and _out_kind(kids[i]) == "Q" and not _reads_results(kids[i]):
+        i -= 1
+    if i < 0 or _out_kind(kids[i]) != "R":
+        return None
+    last = Cutoff(children=[kids[i]], k=node.params["k"])
+    return Then(children=[*kids[:i], last, *kids[i + 1:]])
 
 
 @rule("cutoff_scale_swap")

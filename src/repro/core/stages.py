@@ -27,6 +27,7 @@ from repro.index.inverted import BLOCK
 class Retrieve(Transformer):
     """Exhaustive top-k retrieval under one weighting model (Q -> R)."""
     kind = "retrieve"
+    reads_results = False
 
     def __init__(self, model: str = "BM25", k: int | None = None):
         super().__init__(model=model, k=k)
@@ -40,7 +41,7 @@ class Retrieve(Transformer):
                                     model=model, k=k,
                                     max_postings=ctx.backend.max_postings)
 
-        docs, scores = ctx.backend.vmap_queries(one, Q)
+        docs, scores = ctx.backend.vmap_queries(one, Q, key=self.key())
         return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
 
 
@@ -48,6 +49,7 @@ class PrunedRetrieve(Transformer):
     """Block-max pruned top-k — the RQ1-optimised Retrieve (created by the
     CutoffPushdown rewrite; can also be used directly)."""
     kind = "pruned_retrieve"
+    reads_results = False
 
     def __init__(self, model: str = "BM25", k: int = 10, n_terms: int = 8):
         super().__init__(model=model, k=k, n_terms=n_terms)
@@ -64,7 +66,7 @@ class PrunedRetrieve(Transformer):
                                       model=model, k=k, n_blocks=budget,
                                       max_blocks_per_term=mbt)
 
-        docs, scores = ctx.backend.vmap_queries(one, Q)
+        docs, scores = ctx.backend.vmap_queries(one, Q, key=self.key())
         return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
 
 
@@ -72,6 +74,7 @@ class MultiRetrieve(Transformer):
     """Single-pass weighted multi-model retrieval (created by the
     LinearFusion rewrite — beyond-paper optimisation)."""
     kind = "multi_retrieve"
+    reads_results = False
 
     def __init__(self, models: tuple[str, ...], weights: tuple[float, ...],
                  k: int | None = None):
@@ -87,7 +90,7 @@ class MultiRetrieve(Transformer):
                                      models=models, k=k,
                                      max_postings=ctx.backend.max_postings)
 
-        docs, scores = ctx.backend.vmap_queries(one, Q)
+        docs, scores = ctx.backend.vmap_queries(one, Q, key=self.key())
         return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
 
 
@@ -95,6 +98,7 @@ class FatRetrieve(Transformer):
     """Single-pass retrieval + multi-model feature extraction (fat postings —
     the RQ2-optimised form of Retrieve >> (Extract ** ... ** Extract))."""
     kind = "fat_retrieve"
+    reads_results = False
 
     def __init__(self, model: str = "BM25",
                  features: tuple[str, ...] = (), k: int | None = None):
@@ -110,7 +114,7 @@ class FatRetrieve(Transformer):
                 feature_models=self.params["features"], k=k,
                 max_postings=ctx.backend.max_postings)
 
-        docs, scores, feats = ctx.backend.vmap_queries(one, Q)
+        docs, scores, feats = ctx.backend.vmap_queries(one, Q, key=self.key())
         return Q, {"qid": Q["qid"], "docids": docs, "scores": scores,
                    "features": feats}
 
@@ -128,6 +132,8 @@ class SDMRewrite(Transformer):
     rank-affecting, semantics-documented analogue (DESIGN.md §2).
     """
     kind = "sdm_rewrite"
+    out_kind = "Q"
+    reads_results = False
 
     def __init__(self, unigram: float = 0.85):
         super().__init__(unigram=unigram)
@@ -145,6 +151,8 @@ class StemRewrite(Transformer):
     """Context-sensitive-stemming analogue: adds a same-frequency-band
     variant term (synthetic stem class neighbour) at reduced weight."""
     kind = "stem_rewrite"
+    out_kind = "Q"
+    reads_results = False
 
     def __init__(self, weight: float = 0.4):
         super().__init__(weight=weight)
@@ -170,6 +178,8 @@ class StemRewrite(Transformer):
 class RM3Expand(Transformer):
     """Pseudo-relevance-feedback expansion (Q × R -> Q'), paper eq. (5)."""
     kind = "rm3"
+    out_kind = "Q"          # R passes through untouched
+    reads_results = True    # ... but fb_docs are read from it
 
     def __init__(self, fb_terms: int = 10, fb_docs: int = 10, alpha: float = 0.5):
         super().__init__(fb_terms=fb_terms, fb_docs=fb_docs, alpha=alpha)
@@ -185,7 +195,8 @@ class RM3Expand(Transformer):
                                  alpha=self.params["alpha"],
                                  max_fwd=ctx.backend.index.max_fwd_len)
 
-        t2, w2 = ctx.backend.vmap_queries(one, Q, R["docids"], R["scores"])
+        t2, w2 = ctx.backend.vmap_queries(one, Q, R["docids"], R["scores"],
+                                          key=self.key())
         return {**Q, "terms": t2, "weights": w2}, R
 
 
@@ -207,7 +218,8 @@ class Extract(Transformer):
                 ctx.backend.index, terms, weights, docids,
                 model=self.params["model"], max_fwd=ctx.backend.index.max_fwd_len)
 
-        f = ctx.backend.vmap_queries(one, Q, R["docids"])      # [NQ, K]
+        f = ctx.backend.vmap_queries(one, Q, R["docids"],      # [NQ, K]
+                                     key=self.key())
         feats = R.get("features")
         f = f[..., None]
         feats = f if feats is None else jnp.concatenate([feats, f], -1)
@@ -295,5 +307,6 @@ class DenseRerank(Transformer):
             return jnp.where(docids >= 0,
                              self.params["alpha"] * scores + d, -jnp.inf)
 
-        s = ctx.backend.vmap_queries(one, None, qvecs, R["docids"], R["scores"])
+        s = ctx.backend.vmap_queries(one, None, qvecs, R["docids"],
+                                     R["scores"], key=self.key())
         return Q, _sort_by_scores(R, s)

@@ -25,6 +25,13 @@ class Transformer:
     kind: str = "abstract"
     #: stateful nodes (learned rerankers) include a version in their key
     stateful: bool = False
+    #: primary output stream: "R" for result-producing stages, "Q" for
+    #: query-rewrite (Q -> Q) stages.  Rank-cutoff rewrites consult this —
+    #: a % K must only ever attach to an R-producing expression.
+    out_kind: str = "R"
+    #: whether execute() reads the incoming result list R.  A cutoff may
+    #: hop over a Q -> Q stage only if that stage never looks at R.
+    reads_results: bool = True
 
     def __init__(self, children: Sequence["Transformer"] = (), **params):
         self.children = tuple(children)

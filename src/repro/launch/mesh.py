@@ -21,6 +21,17 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_query_mesh(*, max_devices: int | None = None):
+    """1-D ``("data",)`` mesh over the local devices — the serving-side
+    counterpart of the training meshes above, used by the sharded query
+    execution engine (core/engine.py) to data-parallel the query axis.
+    ``max_devices`` restricts the mesh (device-scaling benchmarks)."""
+    devices = jax.local_devices()
+    if max_devices is not None:
+        devices = devices[:max(1, min(max_devices, len(devices)))]
+    return jax.make_mesh((len(devices),), ("data",), devices=devices)
+
+
 # TPU v5e hardware constants used by the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12   # FLOP/s
 HBM_BW = 819e9             # B/s

@@ -1,0 +1,200 @@
+"""Sharded query execution engine: sequential-equivalence, bucket-ladder
+recompile bounds, chunk planning, async plan execution, rewrite soundness
+under sharded execution."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:      # property tests skip; fallbacks below run
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (DenseRerank, Experiment, Extract, ExperimentPlan,
+                        JaxBackend, Retrieve, RM3Expand, SDMRewrite,
+                        ShardedQueryEngine, default_bucket_ladder)
+from repro.core.compiler import Context
+from repro.core.data import make_queries
+
+
+def _seq_backend(env):
+    return JaxBackend(env["index"], default_k=60, query_chunk=4,
+                      dense=env["backend"].dense, sharded=False)
+
+
+def _tiled_queries(env, nq):
+    terms = np.tile(np.asarray(env["Q"]["terms"]), (nq // 8 + 1, 1))[:nq]
+    weights = np.tile(np.asarray(env["Q"]["weights"]), (nq // 8 + 1, 1))[:nq]
+    return make_queries(terms, weights)
+
+
+PIPELINES = [
+    Retrieve("BM25", k=20),
+    Retrieve("BM25", k=20) >> Extract("QL"),
+    Retrieve("BM25", k=20) >> RM3Expand(fb_terms=5, fb_docs=5)
+    >> Retrieve("BM25", k=10),
+    SDMRewrite() >> Retrieve("QL", k=15),
+    Retrieve("BM25", k=20) >> DenseRerank(alpha=0.5),
+]
+
+
+# ---------------------------------------------------------------------------
+# engine == sequential path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("i", range(len(PIPELINES)))
+def test_engine_matches_sequential(small_ir, i):
+    env = small_ir
+    pipe = PIPELINES[i]
+    Re = pipe.transform(env["Q"], backend=env["backend"], optimize=False)
+    Rs = pipe.transform(env["Q"], backend=_seq_backend(env), optimize=False)
+    np.testing.assert_array_equal(np.asarray(Re["docids"]),
+                                  np.asarray(Rs["docids"]))
+    np.testing.assert_allclose(np.asarray(Re["scores"]),
+                               np.asarray(Rs["scores"]), rtol=1e-6)
+
+
+def _check_engine_matches_sequential_at(env, nq):
+    """Padding/bucketing must be invisible at every query-set size."""
+    Q = _tiled_queries(env, nq)
+    pipe = Retrieve("BM25", k=10) >> Extract("QL")
+    Re = pipe.transform(Q, backend=env["backend"], optimize=False)
+    Rs = pipe.transform(Q, backend=_seq_backend(env), optimize=False)
+    assert np.asarray(Re["docids"]).shape[0] == nq
+    np.testing.assert_array_equal(np.asarray(Re["docids"]),
+                                  np.asarray(Rs["docids"]))
+    np.testing.assert_allclose(np.asarray(Re["features"]),
+                               np.asarray(Rs["features"]), rtol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=1, max_value=40))
+    def test_engine_matches_sequential_any_size(small_ir, nq):
+        _check_engine_matches_sequential_at(small_ir, nq)
+
+
+# deterministic fallbacks: bucket boundaries, tails, multi-chunk sizes
+@pytest.mark.parametrize("nq", [1, 7, 8, 9, 32, 33, 40])
+def test_engine_matches_sequential_sizes_fixed(small_ir, nq):
+    _check_engine_matches_sequential_at(small_ir, nq)
+
+
+def test_optimized_pipelines_match_under_sharded_execution(small_ir):
+    """The paper's core equivalence claim must survive the engine: rewritten
+    and unrewritten pipelines agree when executed sharded (exact-equality
+    pipelines only — pruning rewrites are approximate by design)."""
+    env = small_ir
+    be = JaxBackend(env["index"], default_k=60, dense=env["backend"].dense,
+                    capabilities=frozenset({"fat", "multi_model"}))
+    for pipe in [(Retrieve("BM25", k=30) >> SDMRewrite()) % 10,
+                 Retrieve("BM25", k=20) >> Extract("QL") >> Extract("TF_IDF"),
+                 (Retrieve("BM25", k=30) >> RM3Expand(fb_docs=5)) % 10]:
+        Ro = pipe.transform(env["Q"], backend=be, optimize=True)
+        Ru = pipe.transform(env["Q"], backend=_seq_backend(env),
+                            optimize=False)
+        np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                      np.asarray(Ru["docids"]))
+        np.testing.assert_allclose(np.asarray(Ro["scores"]),
+                                   np.asarray(Ru["scores"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder bounds recompilation
+# ---------------------------------------------------------------------------
+
+def test_recompiles_bounded_by_ladder(small_ir):
+    """Across many distinct query-set sizes, one stage may compile at most
+    len(ladder) variants (the seed's loop recompiled per distinct size)."""
+    env = small_ir
+    be = JaxBackend(env["index"], default_k=60, dense=env["backend"].dense)
+    eng = be.engine
+    pipe = Retrieve("BM25", k=10)
+    for nq in (1, 2, 3, 5, 8, 9, 13, 21, 33, 40, 64, 65):
+        pipe.transform(_tiled_queries(env, nq), backend=be, optimize=False)
+    assert eng.max_compiles_per_stage() <= len(eng.ladder)
+    # and the jit cache is really shared across structurally-equal stages
+    pipe2 = Retrieve("BM25", k=10)
+    n = eng.max_compiles_per_stage()
+    pipe2.transform(_tiled_queries(env, 17), backend=be, optimize=False)
+    assert eng.max_compiles_per_stage() == n
+
+
+def test_chunk_plan_covers_and_buckets(small_ir):
+    eng = small_ir["backend"].engine
+    for nq in range(1, 3 * eng.ladder[-1] + 2):
+        plan = eng.chunk_plan(nq)
+        assert sum(n for _, n, _ in plan) == nq
+        assert all(b in eng.ladder for _, _, b in plan)
+        assert all(n <= b for _, n, b in plan)
+        starts = [s for s, _, _ in plan]
+        assert starts == sorted(starts)
+    with pytest.raises(ValueError):
+        eng.chunk_plan(0)
+
+
+def test_default_ladder_is_device_aligned():
+    for nd in (1, 2, 3, 5, 8):
+        ladder = default_bucket_ladder(nd)
+        assert all(b % nd == 0 for b in ladder)
+        assert ladder == tuple(sorted(ladder))
+
+
+def test_explicit_ladder_honoured():
+    eng = ShardedQueryEngine(ladder=(2, 6))
+    assert eng.ladder == (2, 6)
+    assert eng.chunk_plan(15) == ((0, 6, 6), (6, 6, 6), (12, 3, 6))
+    assert eng.chunk_plan(1) == ((0, 1, 2),)
+
+
+# ---------------------------------------------------------------------------
+# plan execution through the engine
+# ---------------------------------------------------------------------------
+
+def test_plan_results_identical_with_and_without_engine(small_ir):
+    env = small_ir
+    be_seq = _seq_backend(env)
+    for optimize in (False, True):
+        pe = ExperimentPlan(PIPELINES, env["backend"], optimize=optimize)
+        ps = ExperimentPlan(PIPELINES, be_seq, optimize=optimize)
+        re_ = pe.execute(env["Q"], ctx=Context(env["backend"]), record=None)
+        rs = ps.execute(env["Q"], ctx=Context(be_seq))
+        for Ra, Rb in zip(re_, rs):
+            np.testing.assert_array_equal(np.asarray(Ra["docids"]),
+                                          np.asarray(Rb["docids"]))
+            np.testing.assert_allclose(np.asarray(Ra["scores"]),
+                                       np.asarray(Rb["scores"]), rtol=1e-6)
+
+
+def test_untimed_plan_skips_barriers_and_stays_correct(small_ir):
+    """record=None runs fully async (no per-stage block) yet returns the
+    same results as the barriered timed pass."""
+    env = small_ir
+    plan = ExperimentPlan(PIPELINES[:3], env["backend"], optimize=False)
+    r_async = plan.execute(env["Q"], ctx=Context(env["backend"]), record=None)
+    r_timed = plan.execute(env["Q"], ctx=Context(env["backend"]),
+                           record="cold")
+    assert all(n.cold_s is not None for n in plan.nodes())
+    for Ra, Rb in zip(r_async, r_timed):
+        np.testing.assert_array_equal(np.asarray(Ra["docids"]),
+                                      np.asarray(Rb["docids"]))
+
+
+def test_experiment_through_engine_measures_time(small_ir):
+    env = small_ir
+    res = Experiment([Retrieve("BM25", k=30), Retrieve("QL", k=30)],
+                     env["Q"], env["topics"].qrels, ["map"],
+                     backend=env["backend"], measure_time=True)
+    for row in res["table"]:
+        assert row["mrt_ms"] > 0
+        assert row["compile_ms"] >= 0
+
+
+def test_engine_chunk_cache_reused_across_stages(small_ir):
+    """Stage-to-stage handoff must reuse sharded chunk pieces instead of
+    re-slicing the concatenated output."""
+    env = small_ir
+    be = JaxBackend(env["index"], default_k=60, dense=env["backend"].dense)
+    (Retrieve("BM25", k=20) >> Extract("QL") >> Extract("TF_IDF")) \
+        .transform(env["Q"], backend=be, optimize=False)
+    assert be.engine.n_chunk_cache_hits > 0

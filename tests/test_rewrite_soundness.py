@@ -1,0 +1,123 @@
+"""cutoff_into_then soundness: a rank cutoff may only attach to an
+R-producing stage.  Pure Q -> Q rewrites are hopped over; R-reading query
+rewrites (RM3) block the push entirely."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (JaxBackend, Retrieve, RM3Expand, SDMRewrite,
+                        StemRewrite, optimize_pipeline)
+from repro.core.stages import PrunedRetrieve
+from repro.core.transformer import Cutoff, Then
+
+
+def _no_prune_backend(env):
+    return JaxBackend(env["index"], default_k=60, dense=env["backend"].dense,
+                      capabilities=frozenset({"fat", "multi_model"}))
+
+
+def _kinds(node):
+    if isinstance(node, Then):
+        return [type(c).__name__ for c in node.children]
+    return [type(node).__name__]
+
+
+# ---------------------------------------------------------------------------
+# structure: where the cutoff lands
+# ---------------------------------------------------------------------------
+
+def test_cutoff_lands_on_r_producer_not_query_rewrite(small_ir):
+    """(Retrieve >> SDM) % K: the cutoff hops over the trailing Q -> Q
+    stage onto Retrieve, where the RQ1 pushdown can fire."""
+    be = small_ir["backend"]
+    opt = optimize_pipeline((Retrieve("BM25", k=30) >> SDMRewrite()) % 10, be)
+    assert isinstance(opt, Then)
+    assert isinstance(opt.children[0], PrunedRetrieve)
+    assert opt.children[0].params["k"] == 10
+    assert type(opt.children[-1]).__name__ == "SDMRewrite"
+    # no Cutoff survives anywhere, and none wraps a Q -> Q stage
+    def walk(n):
+        assert not (isinstance(n, Cutoff) and n.children[0].out_kind == "Q")
+        for c in n.children:
+            walk(c)
+    walk(opt)
+
+
+def test_cutoff_hops_multiple_trailing_rewrites(small_ir):
+    be = _no_prune_backend(small_ir)
+    pipe = (Retrieve("BM25", k=30) >> SDMRewrite() >> StemRewrite()) % 10
+    opt = optimize_pipeline(pipe, be)
+    assert isinstance(opt, Then)
+    assert isinstance(opt.children[0], Cutoff)        # no pruning capability
+    assert isinstance(opt.children[0].children[0], Retrieve)
+    assert _kinds(opt)[1:] == ["SDMRewrite", "StemRewrite"]
+
+
+def test_cutoff_blocked_by_r_reading_rewrite(small_ir):
+    """RM3 reads fb_docs from R, so the cutoff must stay outside the Then —
+    truncating R before RM3 would change the expansion."""
+    be = small_ir["backend"]
+    pipe = (Retrieve("BM25", k=30) >> RM3Expand(fb_docs=5)) % 10
+    trace = []
+    opt = optimize_pipeline(pipe, be, trace=trace)
+    assert isinstance(opt, Cutoff)
+    assert not any(name == "cutoff_into_then" for name, *_ in trace)
+
+
+def test_cutoff_still_pushes_past_rm3_onto_final_retrieve(small_ir):
+    """RM3 in the middle is untouched: the cutoff attaches to the final
+    R-producing Retrieve as before."""
+    be = small_ir["backend"]
+    pipe = (Retrieve("BM25", k=30) >> RM3Expand(fb_docs=5)
+            >> Retrieve("BM25", k=30)) % 10
+    opt = optimize_pipeline(pipe, be)
+    assert isinstance(opt, Then)
+    assert isinstance(opt.children[-1], PrunedRetrieve)
+    assert type(opt.children[1]).__name__ == "RM3Expand"
+
+
+# ---------------------------------------------------------------------------
+# semantics: optimised == unoptimised (exact on a no-pruning backend)
+# ---------------------------------------------------------------------------
+
+def _check_rankings_preserved(env, k, trailing):
+    be = _no_prune_backend(env)
+    pipe = Retrieve("BM25", k=30)
+    for t in trailing:
+        pipe = pipe >> t
+    pipe = pipe % k
+    Ro = pipe.transform(env["Q"], backend=be, optimize=True)
+    Ru = pipe.transform(env["Q"], backend=be, optimize=False)
+    np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                  np.asarray(Ru["docids"]))
+    np.testing.assert_allclose(np.asarray(Ro["scores"]),
+                               np.asarray(Ru["scores"]), rtol=1e-6)
+
+
+TRAILING = {
+    "sdm": SDMRewrite(),
+    "stem": StemRewrite(),
+    "rm3": RM3Expand(fb_docs=5, fb_terms=5),
+}
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=1, max_value=25),
+           st.lists(st.sampled_from(sorted(TRAILING)), max_size=3))
+    def test_cutoff_rewrite_preserves_rankings(small_ir, k, names):
+        _check_rankings_preserved(small_ir, k,
+                                  [TRAILING[n] for n in names])
+
+
+# deterministic fallbacks so coverage survives without hypothesis
+@pytest.mark.parametrize("k,names", [
+    (10, ["sdm"]), (5, ["stem", "sdm"]), (10, ["rm3"]),
+    (7, ["sdm", "rm3"]), (12, []),
+])
+def test_cutoff_rewrite_preserves_rankings_fixed(small_ir, k, names):
+    _check_rankings_preserved(small_ir, k, [TRAILING[n] for n in names])
