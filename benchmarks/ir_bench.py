@@ -176,6 +176,65 @@ def bench_planner(env, k: int = 1000, repeats: int = 3,
     }
 
 
+def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
+    """Cost-gated kernel lowering (the IR compiler's fusion pass): fused vs
+    unfused MRT/QPS per workload, the fusion gate's decisions, and the
+    per-pass compile-time breakdown of the pass-manager compiler.
+
+    Both backends lack dynamic pruning, so ``Retrieve % K`` survives the
+    rewrite pass intact and the only difference is the kernel lowering:
+    ``fused`` carries the ``fused_topk`` / ``fused_scoring`` capabilities,
+    ``unfused`` keeps the interpreter path (slice-after-full-k)."""
+    from repro.core import compile_pipeline
+
+    index = env["index"]
+    base = frozenset({"fat", "multi_model"})
+    be_fused = JaxBackend(index, default_k=1000, query_chunk=8,
+                          capabilities=base | {"fused_topk", "fused_scoring"})
+    be_unfused = JaxBackend(index, default_k=1000, query_chunk=8,
+                            dense=be_fused.dense, capabilities=base)
+    topics = env["formulations"]["T"]
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    workloads = {
+        "retrieve_topk": Retrieve("BM25") % k,
+        "fat_scorer_topk": (Retrieve("BM25")
+                            >> (Extract("QL") ** Extract("TF_IDF"))) % k,
+    }
+    out = {"k": k, "workloads": {}, "compile_breakdown_ms": {}}
+    breakdown: dict[str, float] = {}
+    for name, pipe in workloads.items():
+        report = {}
+        op = compile_pipeline(pipe, be_fused, report=report)
+        for pname, secs in report["pass_timings_s"]:
+            breakdown[pname] = breakdown.get(pname, 0.0) + 1000 * secs
+        mrt_f, Rf = _time_pipeline(pipe, Q, be_fused, optimize=True,
+                                   repeats=repeats)
+        mrt_u, Ru = _time_pipeline(pipe, Q, be_unfused, optimize=True,
+                                   repeats=repeats)
+        overlap = np.mean([
+            len(set(a[a >= 0].tolist()) & set(b[b >= 0].tolist())) / k
+            for a, b in zip(np.asarray(Rf["docids"]),
+                            np.asarray(Ru["docids"]))])
+        out["workloads"][name] = {
+            "fused_stage": op.kind.startswith("fused"),
+            "gate_decisions": [
+                {"pattern": d["pattern"], "accepted": d["accepted"],
+                 "fused_proxy_s": d["fused_proxy_s"],
+                 "unfused_proxy_s": d["unfused_proxy_s"]}
+                for d in report["fusion_decisions"]],
+            "fused_mrt_ms": round(mrt_f, 2),
+            "unfused_mrt_ms": round(mrt_u, 2),
+            "fused_qps": round(1000.0 / mrt_f, 1),
+            "unfused_qps": round(1000.0 / mrt_u, 1),
+            "speedup": round(mrt_u / mrt_f, 2),
+            "topk_overlap": round(float(overlap), 3),
+        }
+    out["compile_breakdown_ms"] = {p: round(ms, 2)
+                                   for p, ms in breakdown.items()}
+    return out
+
+
 #: serving-profile bucket ladder: large steady-state chunks amortise
 #: dispatch; three rungs bound recompilation at 3 variants per stage
 ENGINE_BENCH_LADDER = (16, 64, 128)

@@ -48,6 +48,11 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
     OUT.mkdir(parents=True, exist_ok=True)
+    # clear stale section files: summary.json is merged from OUT/*.json, so
+    # a leftover section from a previous run would mask exactly the
+    # missing-section failures scripts/check_bench.py exists to catch
+    for stale in OUT.glob("*.json"):
+        stale.unlink()
     csv_rows: list[dict] = []
 
     # --- KERN ---------------------------------------------------------------
@@ -106,6 +111,23 @@ def main() -> None:
             "derived": (f"speedup={pl['amortised_speedup']}x,"
                         f"stages={pl['stage_executions']}/"
                         f"{pl['stage_requests']}")})
+
+        # --- fusion: cost-gated kernel lowering --------------------------
+        fus = ir_bench.bench_fusion(env, repeats=args.repeats)
+        (OUT / "fusion.json").write_text(json.dumps(fus, indent=1))
+        print("\n== Fusion: cost-gated kernel lowering (MRT ms/query) ==")
+        print(f"compile breakdown (ms/pass): {fus['compile_breakdown_ms']}")
+        for name, w in fus["workloads"].items():
+            print(f"[{name}] {w}")
+            csv_rows.append({
+                "name": f"fusion_{name}_fused",
+                "us_per_call": w["fused_mrt_ms"] * 1000,
+                "derived": (f"speedup={w['speedup']}x,"
+                            f"fused_stage={w['fused_stage']},"
+                            f"overlap={w['topk_overlap']}")})
+            csv_rows.append({
+                "name": f"fusion_{name}_unfused",
+                "us_per_call": w["unfused_mrt_ms"] * 1000, "derived": ""})
 
     # --- ENGINE: device-sharded query throughput -------------------------
     if not args.skip_ir:

@@ -37,6 +37,11 @@ def main():
         print(f"{name:8s} {pipe!r}\n     -->  {opt!r}"
               f"   (rules: {[t[0] for t in trace]})")
 
+    # 3b. or inspect the full compiler pipeline: typed IR before/after
+    # each pass (schemas, rewrites, the cost-gated kernel lowering)
+    print()
+    print(top10.explain(backend))
+
     # 4. evaluate side-by-side (common topics/qrels, shared prefix cache)
     res = Experiment(
         [bm25 % 100, fusion, prf],

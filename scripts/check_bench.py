@@ -1,0 +1,41 @@
+"""Fail loudly when the bench run silently dropped a section.
+
+The bench-smoke CI job uploads ``summary.json`` as the per-push trajectory
+artifact; a section that vanishes (e.g. the engine-scaling subprocess died,
+or the fusion bench was skipped) used to pass silently and poison the
+trajectory.  This gate requires the sections the trajectory tracks to be
+present AND non-empty.
+
+    python scripts/check_bench.py [experiments/bench/summary.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/bench/summary.json"
+    try:
+        summary = json.load(open(path))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read bench summary {path}: {e}", file=sys.stderr)
+        return 1
+    missing = [k for k in REQUIRED if not summary.get(k)]
+    if missing:
+        print(f"FAIL: bench summary {path} is missing sections: {missing} "
+              f"(present: {sorted(summary)})", file=sys.stderr)
+        return 1
+    fus = summary["fusion"].get("workloads", {})
+    if not fus:
+        print("FAIL: fusion section has no workloads", file=sys.stderr)
+        return 1
+    print(f"bench summary OK: sections {list(REQUIRED)} all present; "
+          f"fusion workloads: {sorted(fus)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

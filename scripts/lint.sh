@@ -1,13 +1,20 @@
 #!/usr/bin/env sh
-# Lint gate (ruff, pinned in requirements-dev.txt). Degrades to a warning
-# where ruff is not installed (e.g. the baked runtime image) so the tier-1
-# entrypoint still runs everywhere; GitHub CI always installs it.
+# Lint gate (ruff, pinned in requirements-dev.txt): `ruff check` plus
+# `ruff format --check`. Degrades to a warning where ruff is not installed
+# (e.g. the baked runtime image) so the tier-1 entrypoint still runs
+# everywhere; GitHub CI always installs it.
 set -eu
 cd "$(dirname "$0")/.."
+fmt_hint() {
+    echo "format gate failed: run 'ruff format .' (or 'python -m ruff format .') and commit the result" >&2
+    exit 1
+}
 if command -v ruff >/dev/null 2>&1; then
     ruff check .
+    ruff format --check . || fmt_hint
 elif python -m ruff --version >/dev/null 2>&1; then
     python -m ruff check .
+    python -m ruff format --check . || fmt_hint
 else
     echo "lint skipped: ruff not installed (python -m pip install -r requirements-dev.txt)" >&2
 fi

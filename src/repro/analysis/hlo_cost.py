@@ -322,6 +322,34 @@ def analyze(hlo_text: str) -> dict[str, Any]:
     }
 
 
+# ---------------------------------------------------------------------------
+# callable estimation — the pipeline compiler's cost gate (core/passes.py)
+# ---------------------------------------------------------------------------
+
+#: nominal per-chip peaks for the roofline time proxy.  Only *ratios* of
+#: proxies ever gate a decision, so absolute calibration is irrelevant —
+#: these just weight flops against HBM traffic plausibly (TPU-class chip).
+PEAK_FLOPS_PER_S = 1.0e14
+PEAK_BYTES_PER_S = 1.0e12
+
+
+def estimate_callable(fn, *args) -> dict[str, Any]:
+    """Lower ``fn(*args)`` (args may be ``jax.ShapeDtypeStruct`` pytrees) to
+    post-optimisation HLO and run the trip-count-aware cost model over it.
+
+    Adds ``time_proxy_s`` — flops/peak + bytes/peak, an additive roofline
+    proxy: comparing two candidates' proxies orders them by modelled cost
+    even when one resource dominates.  Used by the fusion pass's cost gate;
+    callers should cache per content key (compilation is the expensive part).
+    """
+    import jax
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    out = analyze(text)
+    out["time_proxy_s"] = (out["flops_per_chip"] / PEAK_FLOPS_PER_S
+                           + out["bytes_per_chip"] / PEAK_BYTES_PER_S)
+    return out
+
+
 if __name__ == "__main__":
     import sys
     print(json.dumps(analyze(open(sys.argv[1]).read()), indent=1))

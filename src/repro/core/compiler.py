@@ -1,10 +1,12 @@
 """Pipeline compiler + executor (paper §4).
 
-``run_pipeline`` = normalise -> rewrite against the backend's capability
-descriptor -> execute the DAG with hash-consed result caching (identical
-sub-pipelines run once per query set — the paper's grid-search/common-prefix
-caching).  Leaf stages call jitted index ops; queries stream through in
-chunks (the DP axis of a TPU deployment).
+``run_pipeline`` = lower to the typed IR -> run the pass-manager compiler
+(canonicalise, schema inference, rewrite rules, CSE, cost-gated kernel
+fusion — ``core/passes.py``) -> execute the IR with hash-consed result
+caching (identical sub-pipelines run once per query set — the paper's
+grid-search/common-prefix caching).  Combinator ops are interpreted here;
+leaf ops delegate to their stage payload, which calls jitted index ops with
+the op's content key naming the engine's jit-cache entry.
 
 Result identity is *content-addressed*: the memo key for a node is
 ``(node.key(), token)`` where ``token`` digests the actual input arrays at
@@ -25,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import ShardedQueryEngine
+from repro.core.engine import ShardedQueryEngine, StageProgram
+from repro.core.ir import Op, lower
 from repro.core.transformer import Transformer
 from repro.index.dense import DenseIndex, build_dense_index
 from repro.index.inverted import BLOCK, InvertedIndex
@@ -39,9 +42,11 @@ class JaxBackend:
     """Execution backend over the JAX-native index (capability descriptor +
     sharded bucketed query execution + query embedding)."""
 
-    #: capabilities consulted by the rewrite rules (paper §4: BMW cutoff on
-    #: Anserini; fat postings on Terrier — our backend supports all)
-    CAPABILITIES = frozenset({"pruned_topk", "fat", "multi_model"})
+    #: capabilities consulted by the rewrite/fusion passes (paper §4: BMW
+    #: cutoff on Anserini; fat postings on Terrier — our backend supports
+    #: all, plus the Pallas kernel lowerings the fusion pass cost-gates)
+    CAPABILITIES = frozenset({"pruned_topk", "fat", "multi_model",
+                              "fused_topk", "fused_scoring"})
 
     def __init__(self, index: InvertedIndex, dense: DenseIndex | None = None,
                  *, default_k: int = 1000, query_chunk: int = 16,
@@ -82,7 +87,7 @@ class JaxBackend:
         (a stage's structural key) names the engine's persistent jit-cache
         entry.  Falls back to the sequential single-device chunked loop."""
         if self.engine is not None:
-            return self.engine.map_queries(fn, Q, *extra, key=key)
+            return self.engine.run(StageProgram(key=key, fn=fn), Q, *extra)
         return self.vmap_queries_sequential(fn, Q, *extra)
 
     def vmap_queries_sequential(self, fn, Q, *extra):
@@ -214,16 +219,16 @@ def _align_features(base_docs, child_docs, child_feats):
     return aligned
 
 
-# node-kind -> executor for combinators; each receives the content token of
-# its input so sub-pipeline results can be memoised soundly
-def _exec_then(node, ctx, Q, R, tok):
-    for child in node.children:
+# op-kind -> executor for combinator IR ops; each receives the content token
+# of its input so sub-pipeline results can be memoised soundly
+def _exec_then(op, ctx, Q, R, tok):
+    for child in op.inputs:
         Q, R, tok = _execute(child, ctx, Q, R, tok)
     return Q, R
 
 
-def _exec_linear(node, ctx, Q, R, tok):
-    outs = [_execute(c, ctx, Q, R, tok)[1] for c in node.children]
+def _exec_linear(op, ctx, Q, R, tok):
+    outs = [_execute(c, ctx, Q, R, tok)[1] for c in op.inputs]
     K = max(o["docids"].shape[1] for o in outs)
     pad = lambda o: jnp.pad(o["docids"], ((0, 0), (0, K - o["docids"].shape[1])),
                             constant_values=-1)
@@ -231,45 +236,45 @@ def _exec_linear(node, ctx, Q, R, tok):
                              constant_values=-jnp.inf)
     docs = jnp.stack([pad(o) for o in outs], 1)
     scores = jnp.stack([pads(o) for o in outs], 1)
-    w = jnp.asarray(node.params["weights"], jnp.float32)
+    w = jnp.asarray(op.params["weights"], jnp.float32)
     d, s = _combine_linear(docs, scores, w)
     return Q, {"qid": Q["qid"], "docids": d, "scores": s}
 
 
-def _exec_scale(node, ctx, Q, R, tok):
-    Q, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
-    a = node.params["alpha"]
+def _exec_scale(op, ctx, Q, R, tok):
+    Q, R1, _ = _execute(op.inputs[0], ctx, Q, R, tok)
+    a = op.params["alpha"]
     return Q, {**R1, "scores": jnp.where(R1["docids"] >= 0,
                                          R1["scores"] * a, -jnp.inf)}
 
 
-def _exec_cutoff(node, ctx, Q, R, tok):
-    Q, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
-    k = node.params["k"]
+def _exec_cutoff(op, ctx, Q, R, tok):
+    Q, R1, _ = _execute(op.inputs[0], ctx, Q, R, tok)
+    k = op.params["k"]
     out = {**R1, "docids": R1["docids"][:, :k], "scores": R1["scores"][:, :k]}
     if "features" in R1:
         out["features"] = R1["features"][:, :k]
     return Q, out
 
 
-def _exec_setop(node, ctx, Q, R, tok):
-    _, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
-    _, R2, _ = _execute(node.children[1], ctx, Q, R, tok)
-    fn = _setop_union if node.params["op"] == "union" else _setop_intersect
+def _exec_setop(op, ctx, Q, R, tok):
+    _, R1, _ = _execute(op.inputs[0], ctx, Q, R, tok)
+    _, R2, _ = _execute(op.inputs[1], ctx, Q, R, tok)
+    fn = _setop_union if op.params["op"] == "union" else _setop_intersect
     d, s = fn(R1["docids"], R1["scores"], R2["docids"], R2["scores"])
     return Q, {"qid": Q["qid"], "docids": d, "scores": s}
 
 
-def _exec_concat(node, ctx, Q, R, tok):
-    _, R1, _ = _execute(node.children[0], ctx, Q, R, tok)
-    _, R2, _ = _execute(node.children[1], ctx, Q, R, tok)
+def _exec_concat(op, ctx, Q, R, tok):
+    _, R1, _ = _execute(op.inputs[0], ctx, Q, R, tok)
+    _, R2, _ = _execute(op.inputs[1], ctx, Q, R, tok)
     d, s = _concat_rankings(R1["docids"], R1["scores"],
                             R2["docids"], R2["scores"])
     return Q, {"qid": Q["qid"], "docids": d, "scores": s}
 
 
-def _exec_feature_union(node, ctx, Q, R, tok):
-    outs = [_execute(c, ctx, Q, R, tok)[1] for c in node.children]
+def _exec_feature_union(op, ctx, Q, R, tok):
+    outs = [_execute(c, ctx, Q, R, tok)[1] for c in op.inputs]
     base = outs[0]
     cols = [_feature_columns(base)]
     for o in outs[1:]:
@@ -359,35 +364,41 @@ class Context:
         return h.hexdigest()
 
 
-def _execute(node: Transformer, ctx: Context, Q, R, tok: str | None = None):
-    """Execute ``node`` on (Q, R); returns ``(Q', R', token')`` where
-    ``token'`` content-addresses the output."""
+def _execute(op, ctx: Context, Q, R, tok: str | None = None):
+    """Execute an IR op on (Q, R); returns ``(Q', R', token')`` where
+    ``token'`` content-addresses the output.  A ``Transformer`` is accepted
+    for compatibility and lowered on the fly (keys are representation-
+    independent, so the memo stays shared either way)."""
+    if isinstance(op, Transformer):
+        op = lower(op)
     if tok is None:
         tok = ctx.source_token(Q, R)
-    ctx.pin(node)
-    key = node.key()
+    ctx.pin(op)
+    if op.ref is not None:
+        ctx.pin(op.ref)
+    key = op.key()
     memo_key = (key, tok)
     hit = ctx.memo.get(memo_key)
     if hit is not None:
         return hit
-    fn = _COMBINATORS.get(node.kind)
+    fn = _COMBINATORS.get(op.kind)
     if fn is not None:
-        Q2, R2 = fn(node, ctx, Q, R, tok)
+        Q2, R2 = fn(op, ctx, Q, R, tok)
     else:
         ctx.exec_counts[key] = ctx.exec_counts.get(key, 0) + 1
-        Q2, R2 = node.execute(ctx, Q, R)
+        Q2, R2 = op.ref.execute(ctx, Q, R)
     out = (Q2, R2, derive_token(key, tok))
     ctx.memo[memo_key] = out
     return out
 
 
-def run_pipeline(node: Transformer, Q, R=None, *, backend: JaxBackend,
+def run_pipeline(node: Transformer | Op, Q, R=None, *, backend: JaxBackend,
                  optimize: bool = True, ctx: Context | None = None):
-    from repro.core.rewrite import optimize_pipeline
-    if optimize:
-        node = optimize_pipeline(node, backend)
+    from repro.core.passes import compile_pipeline
+    op = node if isinstance(node, Op) else \
+        compile_pipeline(node, backend, optimize=optimize)
     ctx = ctx or Context(backend)
-    Q2, R2, _ = _execute(node, ctx, Q, R)
+    Q2, R2, _ = _execute(op, ctx, Q, R)
     return R2 if R2 is not None else Q2
 
 

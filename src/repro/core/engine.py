@@ -31,6 +31,7 @@ the concatenated result.
 """
 from __future__ import annotations
 
+import dataclasses
 import weakref
 from typing import Any, Callable, Sequence
 
@@ -56,6 +57,21 @@ def default_bucket_ladder(n_devices: int, *, base: int = 8,
         if b not in ladder:
             ladder.append(b)
     return tuple(sorted(ladder))
+
+
+@dataclasses.dataclass(frozen=True)
+class StageProgram:
+    """The engine's unit of execution: a per-query function plus the typed-IR
+    content key (``Op.key()``) that names its persistent jit-cache entry.
+
+    The key fully determines ``fn``'s behaviour (IR op keys embed every
+    static param, and stateful stages embed a version marker), which is the
+    soundness contract the jit cache relies on: two programs presenting the
+    same key may share one compiled executable.  ``key=None`` marks an
+    anonymous program that compiles fresh and stays out of the cache.
+    """
+    key: Any
+    fn: Callable
 
 
 class ShardedQueryEngine:
@@ -165,10 +181,13 @@ class ShardedQueryEngine:
         return max(self.compiles.values(), default=0)
 
     # -- execution ----------------------------------------------------------
-    def map_queries(self, fn, Q, *extra, key=None):
-        """vmap ``fn(terms, weights, *extra_i)`` over the query axis; if Q is
-        None, ``fn(*extra_i)`` is mapped over the extra arrays.  Returns full
-        (concatenated, trimmed) arrays; dispatch is fully asynchronous."""
+    def run(self, program: StageProgram, Q, *extra):
+        """Execute one IR stage program over the query axis: vmap
+        ``program.fn(terms, weights, *extra_i)`` (or ``fn(*extra_i)`` when Q
+        is None) sharded/bucketed/async, with ``program.key`` naming the
+        persistent jit-cache entry.  Returns full (concatenated, trimmed)
+        arrays; dispatch is fully asynchronous."""
+        key, fn = program.key, program.fn
         args = ((Q["terms"], Q["weights"]) if Q is not None else ()) + extra
         nq = int(args[0].shape[0])
         plan = self.chunk_plan(nq)
@@ -185,6 +204,10 @@ class ShardedQueryEngine:
         full = self._materialize(outs, plan)
         self._remember_outputs(full, outs, plan)
         return full
+
+    def map_queries(self, fn, Q, *extra, key=None):
+        """Compatibility wrapper over :meth:`run`."""
+        return self.run(StageProgram(key=key, fn=fn), Q, *extra)
 
     def _materialize(self, outs, plan):
         _, n_tail, b_tail = plan[-1]

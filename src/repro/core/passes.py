@@ -1,0 +1,643 @@
+"""Pass-manager compiler over the typed pipeline IR (paper §4).
+
+Replaces the ad-hoc fixpoint rewriter (``core/rewrite.py``, now a shim) with
+an explicit ordered pipeline of IR-to-IR passes:
+
+  canonicalise        — re-establish the canonical variadic forms (flatten
+                        Then-of-Then / FeatureUnion nests, inline Scale and
+                        Linear children into Linear weights)
+  schema_inference    — infer per-op :class:`~repro.core.ir.Schema` (Q/R/F
+                        stream, static k, feature width) and validate the
+                        typing rules (a rank cutoff must attach to an
+                        R-producing expression)
+  rewrite             — the equivalence rules (cutoff merge/into-then/
+                        scale-swap/pushdown, fat/extract/linear fusion,
+                        scale folding) re-expressed over IR ops, applied
+                        bottom-up to fixpoint against the backend
+                        capability descriptor
+  cse                 — hash-cons structurally identical subgraphs into
+                        shared op instances; the interning table can span
+                        pipelines, so ``ExperimentPlan`` feeds the plan trie
+                        with literally shared prefix ops
+  fusion              — cost-gated lowering to the Pallas kernel paths:
+                        ``cutoff(retrieve)`` -> FusedTopKRetrieve
+                        (kernels/topk) and ``cutoff(fat_retrieve)`` ->
+                        FusedFatRetrieve (kernels/fused_scoring), accepted
+                        only when the HLO cost model
+                        (:func:`repro.analysis.hlo_cost.estimate_callable`)
+                        prices the fused form strictly cheaper; otherwise
+                        the unfused interpreter path is kept
+  schema_check        — re-infer/validate schemas on the final graph
+
+``compile_pipeline`` is the single entry point the executor
+(``compiler.run_pipeline``), the planner (``plan.ExperimentPlan``) and the
+``optimize_pipeline`` shim all go through; ``explain_pipeline`` renders the
+IR before/after each pass for ``pipeline.explain()``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.core import stages as S
+from repro.core.ir import (COMBINATOR_KINDS, Op, Schema, SchemaError, chain,
+                           leaf, lower, pretty)
+from repro.core.transformer import Transformer
+
+#: query-term width used for cost-gate lowering (only cost *ratios* gate
+#: decisions, and they are monotone in the query width)
+GATE_MAXQ = 8
+
+
+# ---------------------------------------------------------------------------
+# schema inference
+# ---------------------------------------------------------------------------
+
+_RETRIEVER_KINDS = frozenset({"retrieve", "pruned_retrieve", "multi_retrieve",
+                              "fused_topk_retrieve"})
+_FAT_KINDS = frozenset({"fat_retrieve", "fused_fat_retrieve"})
+
+
+def _carry(s_in: Schema | None):
+    return (None, None) if s_in is None else (s_in.k, s_in.width)
+
+
+def _stage_schema(op: Op, s_in: Schema | None, backend,
+                  annot: dict | None) -> Schema:
+    """Schema of ``op``'s output stream given the schema of the incoming R
+    stream (None = statically unknown / absent)."""
+    kind = op.kind
+    k_in, w_in = _carry(s_in)
+    if kind in _RETRIEVER_KINDS:
+        k = op.params.get("k") or (backend.default_k if backend else None)
+        out = Schema("R", k, None, False)
+    elif kind in _FAT_KINDS:
+        k = op.params.get("k") or (backend.default_k if backend else None)
+        out = Schema("F", k, len(op.params["features"]), False)
+    elif kind == "extract":
+        out = Schema("F", k_in, None if s_in is None else (w_in or 0) + 1,
+                     True)
+    elif kind in ("sdm_rewrite", "stem_rewrite"):
+        out = Schema("Q", k_in, w_in, False)
+    elif kind == "rm3":
+        out = Schema("Q", k_in, w_in, True)
+    elif kind == "ltr":
+        out = Schema("F", k_in, w_in, True)
+    elif kind == "dense_rerank":
+        out = Schema("F" if s_in is not None and s_in.out == "F" else "R",
+                     k_in, w_in, True)
+    elif kind == "then":
+        r_sch = s_in
+        child_outs = []
+        for c in op.inputs:
+            st = _stage_schema(c, r_sch, backend, annot)
+            child_outs.append(st)
+            if st.out != "Q":
+                r_sch = st
+        if all(st.out == "Q" for st in child_outs):
+            out = Schema("Q", *_carry(r_sch),
+                         any(st.reads_results for st in child_outs))
+        else:
+            out = Schema(r_sch.out, r_sch.k, r_sch.width,
+                         any(st.reads_results for st in child_outs))
+    elif kind == "cutoff":
+        st = _stage_schema(op.inputs[0], s_in, backend, annot)
+        if st.out == "Q":
+            raise SchemaError(
+                f"rank cutoff %{op.params['k']} typed against a pure "
+                f"Q -> Q expression ({op.inputs[0].label()}): a cutoff may "
+                f"only attach to an R-producing expression")
+        K = op.params["k"]
+        out = Schema(st.out, K if st.k is None else min(K, st.k), st.width,
+                     st.reads_results)
+    elif kind == "scale":
+        st = _stage_schema(op.inputs[0], s_in, backend, annot)
+        out = Schema(st.out, st.k, st.width, st.reads_results)
+    elif kind == "linear":
+        sts = [_stage_schema(c, s_in, backend, annot) for c in op.inputs]
+        ks = [st.k for st in sts]
+        out = Schema("R", None if any(k is None for k in ks) else max(ks),
+                     None, any(st.reads_results for st in sts))
+    elif kind in ("setop", "concat"):
+        s1 = _stage_schema(op.inputs[0], s_in, backend, annot)
+        s2 = _stage_schema(op.inputs[1], s_in, backend, annot)
+        if kind == "setop" and op.params.get("op") == "intersect":
+            k = s1.k
+        else:
+            k = None if s1.k is None or s2.k is None else s1.k + s2.k
+        out = Schema("R", k, None, s1.reads_results or s2.reads_results)
+    elif kind == "feature_union":
+        sts = [_stage_schema(c, s_in, backend, annot) for c in op.inputs]
+        widths = [st.width if st.width else 1 for st in sts]
+        out = Schema("F", sts[0].k,
+                     None if any(st.out == "F" and st.width is None
+                                 for st in sts) else sum(widths),
+                     any(st.reads_results for st in sts))
+    else:
+        # unknown leaf (Generic, user extensions): class attrs, no statics
+        ref = op.ref
+        out = Schema(ref.out_kind if ref is not None else "R", None, None,
+                     ref.reads_results if ref is not None else True)
+    if annot is not None:
+        annot[id(op)] = out
+    return out
+
+
+def annotate(root: Op, backend=None) -> dict[int, Schema]:
+    """id(op) -> Schema for every op in ``root`` (validates as it goes)."""
+    annot: dict[int, Schema] = {}
+    _stage_schema(root, None, backend, annot)
+    return annot
+
+
+def expr_schema(op: Op, backend=None) -> Schema:
+    """Schema of an expression evaluated against an unknown input stream
+    (``out == "Q"`` = pure query rewrite) — the bits rewrite rules guard
+    on."""
+    return _stage_schema(op, None, backend, None)
+
+
+# ---------------------------------------------------------------------------
+# pass infrastructure
+# ---------------------------------------------------------------------------
+
+class PassContext:
+    """Shared state for one compile: backend, rewrite trace, fusion-gate
+    decisions, optional cross-pipeline CSE table, per-pass IR snapshots."""
+
+    def __init__(self, backend, *, trace: list | None = None,
+                 cse_table: dict | None = None, keep_snapshots: bool = False):
+        self.backend = backend
+        self.trace = trace if trace is not None else []
+        self.cse_table = cse_table if cse_table is not None else {}
+        self.decisions: list[dict] = []
+        self.snapshots: list[tuple[str, Op]] = []
+        self.keep_snapshots = keep_snapshots
+        self.timings: list[tuple[str, float]] = []
+
+
+class Pass:
+    name = "pass"
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        raise NotImplementedError
+
+
+class PassManager:
+    def __init__(self, passes: list[Pass]):
+        self.passes = list(passes)
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        if pctx.keep_snapshots:
+            pctx.snapshots.append(("lower", op))
+        for p in self.passes:
+            t0 = time.perf_counter()
+            op = p.run(op, pctx)
+            pctx.timings.append((p.name, time.perf_counter() - t0))
+            if pctx.keep_snapshots:
+                pctx.snapshots.append((p.name, op))
+        return op
+
+
+def _rebuild(op: Op, new_inputs: list[Op]) -> Op:
+    if len(new_inputs) == len(op.inputs) and \
+            all(a is b for a, b in zip(new_inputs, op.inputs)):
+        return op
+    return op.with_inputs(new_inputs)
+
+
+# ---------------------------------------------------------------------------
+# canonicalise
+# ---------------------------------------------------------------------------
+
+class CanonicalizePass(Pass):
+    """Re-establish the canonical variadic node forms on IR (the operator
+    constructors guarantee them at build time; rewrites re-run this)."""
+    name = "canonicalise"
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        return self._walk(op)
+
+    def _walk(self, op: Op) -> Op:
+        op = _rebuild(op, [self._walk(i) for i in op.inputs])
+        if op.kind == "then" and any(i.kind == "then" for i in op.inputs):
+            flat: list[Op] = []
+            for i in op.inputs:
+                flat.extend(i.inputs if i.kind == "then" else [i])
+            return Op("then", {}, flat)
+        if op.kind == "feature_union" and \
+                any(i.kind == "feature_union" for i in op.inputs):
+            flat = []
+            for i in op.inputs:
+                flat.extend(i.inputs if i.kind == "feature_union" else [i])
+            return Op("feature_union", {}, flat)
+        if op.kind == "linear" and \
+                any(i.kind in ("linear", "scale") for i in op.inputs):
+            ws, cs = [], []
+            for w, c in zip(op.params["weights"], op.inputs):
+                if c.kind == "linear":
+                    ws.extend(w * wi for wi in c.params["weights"])
+                    cs.extend(c.inputs)
+                elif c.kind == "scale":
+                    ws.append(w * c.params["alpha"])
+                    cs.append(c.inputs[0])
+                else:
+                    ws.append(w)
+                    cs.append(c)
+            return Op("linear", {"weights": tuple(ws)}, cs)
+        return op
+
+
+# ---------------------------------------------------------------------------
+# schema inference / validation
+# ---------------------------------------------------------------------------
+
+class SchemaPass(Pass):
+    """Infer + validate schemas over the whole graph (raises SchemaError on
+    ill-typed pipelines; the inferred annotations drive explain())."""
+
+    def __init__(self, name: str = "schema_inference"):
+        self.name = name
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        annotate(op, pctx.backend)
+        return op
+
+
+# ---------------------------------------------------------------------------
+# rewrite rules over IR
+# ---------------------------------------------------------------------------
+
+IRRule = Callable[[Op, PassContext], "Op | None"]
+IR_RULES: list[tuple[str, IRRule]] = []
+
+
+def ir_rule(name: str):
+    def deco(fn):
+        IR_RULES.append((name, fn))
+        return fn
+    return deco
+
+
+@ir_rule("cutoff_merge")
+def cutoff_merge(op, pctx):
+    if op.kind == "cutoff" and op.inputs[0].kind == "cutoff":
+        inner = op.inputs[0]
+        k = min(op.params["k"], inner.params["k"])
+        return Op("cutoff", {"k": k}, (inner.inputs[0],))
+    return None
+
+
+@ir_rule("cutoff_into_then")
+def cutoff_into_then(op, pctx):
+    """(A >> B) % K -> A >> (B % K), guarded on B's schema: a rank cutoff is
+    only typed for R-producing expressions.  Trailing Q -> Q rewrites that
+    never read R (SDM, stemming) are hopped over — sound, they cannot
+    observe the truncation — so the cutoff lands on the last R-producing
+    stage and stays eligible for the RQ1 pushdown / kernel lowering.  An
+    R-*reading* query rewrite (RM3 reads fb_docs from R) blocks the push."""
+    if not (op.kind == "cutoff" and op.inputs[0].kind == "then"):
+        return None
+    kids = list(op.inputs[0].inputs)
+    be = pctx.backend
+    i, st = len(kids) - 1, None
+    while i >= 0:
+        st = expr_schema(kids[i], be)
+        if not (st.out == "Q" and not st.reads_results):
+            break
+        i -= 1
+    if i < 0 or st is None or st.out == "Q":
+        return None
+    last = Op("cutoff", {"k": op.params["k"]}, (kids[i],))
+    return Op("then", {}, (*kids[:i], last, *kids[i + 1:]))
+
+
+@ir_rule("cutoff_scale_swap")
+def cutoff_scale_swap(op, pctx):
+    if op.kind == "cutoff" and op.inputs[0].kind == "scale":
+        sc = op.inputs[0]
+        if sc.params["alpha"] > 0:
+            inner = Op("cutoff", {"k": op.params["k"]}, (sc.inputs[0],))
+            return Op("scale", {"alpha": sc.params["alpha"]}, (inner,))
+    return None
+
+
+@ir_rule("cutoff_pushdown")
+def cutoff_pushdown(op, pctx):
+    """Retrieve % K -> PrunedRetrieve(K): the RQ1 dynamic-pruning rewrite."""
+    if "pruned_topk" not in pctx.backend.capabilities:
+        return None
+    if op.kind == "cutoff" and op.inputs[0].kind == "retrieve":
+        ret = op.inputs[0]
+        K = op.params["k"]
+        if ret.params["k"] is None or ret.params["k"] >= K:
+            return leaf(S.PrunedRetrieve(model=ret.params["model"], k=K))
+    return None
+
+
+def _as_extract_models(inputs) -> tuple[str, ...] | None:
+    models = []
+    for c in inputs:
+        if c.kind != "extract":
+            return None
+        models.append(c.params["model"])
+    return tuple(models)
+
+
+@ir_rule("fat_fusion")
+def fat_fusion(op, pctx):
+    """Retrieve >> (Extract ** ... ** Extract) -> FatRetrieve: RQ2 (a single
+    Extract is the degenerate one-feature case)."""
+    if "fat" not in pctx.backend.capabilities or op.kind != "then":
+        return None
+    kids = list(op.inputs)
+    for i in range(len(kids) - 1):
+        a, b = kids[i], kids[i + 1]
+        if a.kind != "retrieve":
+            continue
+        if b.kind == "feature_union":
+            models = _as_extract_models(b.inputs)
+        elif b.kind == "extract":
+            models = (b.params["model"],)
+        else:
+            continue
+        if models is None:
+            continue
+        fat = leaf(S.FatRetrieve(model=a.params["model"], features=models,
+                                 k=a.params["k"]))
+        new_kids = kids[:i] + [fat] + kids[i + 2:]
+        return new_kids[0] if len(new_kids) == 1 else Op("then", {}, new_kids)
+    return None
+
+
+@ir_rule("linear_fusion")
+def linear_fusion(op, pctx):
+    """Σ wᵢ·Retrieve(mᵢ, k) on one index -> MultiRetrieve (one postings
+    pass instead of N — beyond-paper rewrite enabled by score_all)."""
+    if "multi_model" not in pctx.backend.capabilities or op.kind != "linear":
+        return None
+    ks = set()
+    models = []
+    for c in op.inputs:
+        if c.kind != "retrieve":
+            return None
+        ks.add(c.params["k"])
+        models.append(c.params["model"])
+    if len(ks) != 1 or len(models) < 2:
+        return None
+    return leaf(S.MultiRetrieve(models=tuple(models),
+                                weights=tuple(op.params["weights"]),
+                                k=ks.pop()))
+
+
+@ir_rule("scale_fold")
+def scale_fold(op, pctx):
+    if op.kind != "scale":
+        return None
+    inner = op.inputs[0]
+    a = op.params["alpha"]
+    if a == 1.0:
+        return inner
+    if inner.kind == "scale":
+        return Op("scale", {"alpha": a * inner.params["alpha"]},
+                  (inner.inputs[0],))
+    if inner.kind == "linear":
+        return Op("linear",
+                  {"weights": tuple(a * w for w in inner.params["weights"])},
+                  inner.inputs)
+    return None
+
+
+class RewritePass(Pass):
+    """Bottom-up application of the equivalence rules to a fixpoint — the
+    IR re-expression of the old ``rewrite.optimize_pipeline`` loop."""
+    name = "rewrite"
+
+    def __init__(self, max_iters: int = 20):
+        self.max_iters = max_iters
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        for _ in range(self.max_iters):
+            new = self._walk(op, pctx)
+            if new.key() == op.key():
+                return new
+            op = new
+        return op
+
+    def _walk(self, op: Op, pctx: PassContext) -> Op:
+        op = _rebuild(op, [self._walk(i, pctx) for i in op.inputs])
+        for name, rule in IR_RULES:
+            out = rule(op, pctx)
+            if out is not None and out.key() != op.key():
+                pctx.trace.append((name, op, out))
+                return self._walk(out, pctx)
+        return op
+
+
+# ---------------------------------------------------------------------------
+# common-subexpression elimination
+# ---------------------------------------------------------------------------
+
+class CSEPass(Pass):
+    """Hash-cons structurally identical subgraphs into shared op instances.
+
+    Keys are content keys, so two pipelines building ``Retrieve("BM25")``
+    separately intern to ONE op; with a cross-pipeline table
+    (``PassContext.cse_table`` shared by ``ExperimentPlan``) the plan trie
+    receives literally shared prefix ops.  Stateful stages and
+    object-identity params embed uid/id in their key, so distinct live
+    objects never merge."""
+    name = "cse"
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        return self._intern(op, pctx.cse_table)
+
+    def _intern(self, op: Op, table: dict) -> Op:
+        op = _rebuild(op, [self._intern(i, table) for i in op.inputs])
+        hit = table.get(op.key())
+        if hit is None:
+            table[op.key()] = op
+            return op
+        return hit
+
+
+# ---------------------------------------------------------------------------
+# cost-gated fusion / kernel lowering
+# ---------------------------------------------------------------------------
+
+def _abstract_args(backend):
+    import jax
+    import jax.numpy as jnp
+    idx = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), backend.index)
+    t = jax.ShapeDtypeStruct((GATE_MAXQ,), jnp.int32)
+    w = jax.ShapeDtypeStruct((GATE_MAXQ,), jnp.float32)
+    return idx, t, w
+
+
+def _estimate(backend, key, build):
+    """Cost estimate for one candidate per-query program, cached on the
+    backend by content key (compilation dominates; estimates are pure
+    functions of backend + static params)."""
+    cache = backend.__dict__.setdefault("_cost_estimates", {})
+    if key in cache:
+        return cache[key]
+    from repro.analysis.hlo_cost import estimate_callable
+    try:
+        fn = build()
+        est = estimate_callable(fn, *_abstract_args(backend))
+    except Exception:          # lowering unavailable: never fuse blind
+        est = None
+    cache[key] = est
+    return est
+
+
+class FusionPass(Pass):
+    """Lower ``cutoff(retrieve)`` / ``cutoff(fat_retrieve)`` chains onto the
+    Pallas kernel paths, gated by the HLO cost model: the fused candidate
+    must price *strictly* cheaper than the unfused chain it replaces, else
+    the unfused interpreter path is kept.  Every decision (either way) is
+    recorded in ``PassContext.decisions``."""
+    name = "fusion"
+
+    def run(self, op: Op, pctx: PassContext) -> Op:
+        return self._walk(op, pctx)
+
+    def _walk(self, op: Op, pctx: PassContext) -> Op:
+        op = _rebuild(op, [self._walk(i, pctx) for i in op.inputs])
+        if op.kind != "cutoff" or not op.inputs[0].is_leaf:
+            return op
+        inner = op.inputs[0]
+        be = pctx.backend
+        K = op.params["k"]
+        k_in = inner.params.get("k") or be.default_k
+        if K > k_in:
+            return op
+        from repro.index import retrieve as RT
+        mp = be.max_postings
+        if inner.kind == "retrieve" and "fused_topk" in be.capabilities:
+            from repro.kernels.topk.ops import kernel_native
+            model = inner.params["model"]
+            fused = leaf(S.FusedTopKRetrieve(model=model, k=K))
+            if self._gate(pctx, "topk", kernel_native=kernel_native(K),
+                          unfused=("topk_unfused", model, k_in, mp),
+                          fused=("topk_fused", model, K, mp),
+                          build_unfused=lambda: (
+                              lambda ix, t, w: RT.retrieve_topk(
+                                  ix, t, w, model=model, k=k_in,
+                                  max_postings=mp)),
+                          build_fused=lambda: (
+                              lambda ix, t, w: RT.retrieve_topk_fused(
+                                  ix, t, w, model=model, k=K,
+                                  max_postings=mp))):
+                pctx.trace.append(("fuse_topk", op, fused))
+                return fused
+        elif inner.kind == "fat_retrieve" and \
+                "fused_scoring" in be.capabilities:
+            from repro.kernels.fused_scoring.ops import models_supported
+            model = inner.params["model"]
+            feats = tuple(inner.params["features"])
+            if not models_supported((model,) + feats):
+                return op
+            fused = leaf(S.FusedFatRetrieve(model=model, features=feats, k=K))
+            if self._gate(pctx, "fat", kernel_native=True,
+                          unfused=("fat_unfused", model, feats, k_in, mp),
+                          fused=("fat_fused", model, feats, K, mp),
+                          build_unfused=lambda: (
+                              lambda ix, t, w: RT.retrieve_fat(
+                                  ix, t, w, rank_model=model,
+                                  feature_models=feats, k=k_in,
+                                  max_postings=mp)),
+                          build_fused=lambda: (
+                              lambda ix, t, w: RT.retrieve_fat_fused(
+                                  ix, t, w, rank_model=model,
+                                  feature_models=feats, k=K,
+                                  max_postings=mp))):
+                pctx.trace.append(("fuse_fat", op, fused))
+                return fused
+        return op
+
+    def _gate(self, pctx, pattern, *, unfused, fused, build_unfused,
+              build_fused, kernel_native: bool = True) -> bool:
+        be = pctx.backend
+        est_u = _estimate(be, unfused, build_unfused)
+        est_f = _estimate(be, fused, build_fused)
+        accepted = (est_u is not None and est_f is not None
+                    and est_f["time_proxy_s"] < est_u["time_proxy_s"])
+        pctx.decisions.append({
+            "pattern": pattern, "accepted": accepted,
+            "kernel_native": kernel_native,
+            "unfused_key": unfused, "fused_key": fused,
+            "unfused_proxy_s": None if est_u is None else est_u["time_proxy_s"],
+            "fused_proxy_s": None if est_f is None else est_f["time_proxy_s"],
+        })
+        return accepted
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def default_passes() -> list[Pass]:
+    return [CanonicalizePass(), SchemaPass("schema_inference"),
+            RewritePass(), CSEPass(), FusionPass(), SchemaPass("schema_check")]
+
+
+def compile_pipeline(node: Transformer | Op, backend, *,
+                     optimize: bool = True, trace: list | None = None,
+                     cse_table: dict | None = None,
+                     report: dict | None = None,
+                     keep_snapshots: bool = False,
+                     pctx: PassContext | None = None) -> Op:
+    """Lower a pipeline to IR and (optionally) run the pass pipeline.
+
+    ``optimize=False`` lowers only — exactly the seed's unoptimised
+    semantics.  ``report`` (a dict, filled in place) receives per-pass
+    timings and the fusion gate's decisions; ``cse_table`` may be shared
+    across calls to intern ops across pipelines.
+    """
+    op = node if isinstance(node, Op) else lower(node)
+    if not optimize:
+        return op
+    pctx = pctx or PassContext(backend, trace=trace, cse_table=cse_table,
+                               keep_snapshots=keep_snapshots)
+    op = PassManager(default_passes()).run(op, pctx)
+    if report is not None:
+        report["pass_timings_s"] = list(pctx.timings)
+        report["fusion_decisions"] = list(pctx.decisions)
+        report["snapshots"] = list(pctx.snapshots)
+    return op
+
+
+def explain_pipeline(node: Transformer, backend=None, *,
+                     optimize: bool = True) -> str:
+    """Render the IR before/after each pass (``pipeline.explain()``)."""
+    op = lower(node)
+    if backend is None or not optimize:
+        return "== lowered IR ==\n" + pretty(op, _safe_annotate(op, backend))
+    pctx = PassContext(backend, keep_snapshots=True)
+    compile_pipeline(op, backend, pctx=pctx, keep_snapshots=True)
+    out = []
+    prev_key = None
+    for name, snap in pctx.snapshots:
+        if prev_key is not None and snap.key() == prev_key:
+            out.append(f"== after {name}: (unchanged)")
+            continue
+        prev_key = snap.key()
+        head = "lowered IR" if name == "lower" else f"after {name}"
+        out.append(f"== {head} ==\n" + pretty(snap, _safe_annotate(snap,
+                                                                   backend)))
+    for d in pctx.decisions:
+        fmt = lambda v: "n/a" if v is None else f"{v:.4e}s"
+        out.append(f"-- fusion gate [{d['pattern']}]: "
+                   f"{'fused' if d['accepted'] else 'kept unfused'} "
+                   f"(fused {fmt(d['fused_proxy_s'])} vs "
+                   f"unfused {fmt(d['unfused_proxy_s'])})")
+    return "\n".join(out)
+
+
+def _safe_annotate(op: Op, backend):
+    try:
+        return annotate(op, backend)
+    except SchemaError:
+        return None

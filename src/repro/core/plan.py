@@ -2,9 +2,11 @@
 
 The paper's ``Experiment`` promises that pipelines sharing a common prefix
 execute that prefix once.  This module makes the promise *structural*
-instead of accidental: the planner flattens every (rewritten) pipeline into
-its chain of top-level stages, inserts the chains into a **prefix trie**
-keyed by the stages' canonical structural keys, and schedules a depth-first
+instead of accidental: the planner compiles every pipeline through the IR
+pass manager (``core/passes.py``, with one CSE table spanning all
+pipelines), flattens the resulting IR into its chain of top-level stage
+ops, inserts the chains into a **prefix trie** keyed by the ops' stable
+content keys, and schedules a depth-first
 traversal in which every trie node — i.e. every distinct shared
 sub-pipeline — executes **exactly once** per query set.  (Cf. MacAvaney &
 Macdonald on precomputation/caching in pipeline architectures, and Anu &
@@ -34,9 +36,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ir
 from repro.core.compiler import (Context, JaxBackend, _execute, content_token,
                                  derive_token)
-from repro.core.rewrite import optimize_pipeline
+from repro.core.passes import compile_pipeline
 from repro.core.transformer import Transformer
 
 
@@ -44,11 +47,14 @@ from repro.core.transformer import Transformer
 # canonical chains + persistent keys
 # ---------------------------------------------------------------------------
 
-def stage_chain(node: Transformer) -> list[Transformer]:
-    """A (rewritten) pipeline as its linear chain of top-level stages.
+def stage_chain(node: Transformer | ir.Op) -> list:
+    """A (compiled) pipeline as its linear chain of top-level stages.
     Nested combinators stay atomic trie entries; sharing inside them is
-    handled by the content-addressed memo."""
-    return list(node.children) if node.kind == "then" else [node]
+    handled by the content-addressed memo.  The planner operates on IR ops;
+    ``Transformer`` trees are accepted for compatibility."""
+    if isinstance(node, Transformer):
+        node = ir.lower(node)
+    return ir.chain(node)
 
 
 def _key_is_persistent(key) -> bool:
@@ -61,9 +67,10 @@ def _key_is_persistent(key) -> bool:
     return all(_key_is_persistent(c) for c in children)
 
 
-def persistent_key(node: Transformer) -> str | None:
-    """Cross-process digest of a stage's structural key, or None if the key
-    references process-local state and must not be written to disk."""
+def persistent_key(node) -> str | None:
+    """Cross-process digest of a stage's structural key (IR op or
+    Transformer), or None if the key references process-local state and
+    must not be written to disk."""
     key = node.key()
     if not _key_is_persistent(key):
         return None
@@ -144,13 +151,13 @@ class ArtifactCache:
 # ---------------------------------------------------------------------------
 
 class PlanNode:
-    """One trie node = one stage execution, shared by every pipeline whose
-    chain passes through this prefix."""
+    """One trie node = one stage execution (an IR op), shared by every
+    pipeline whose chain passes through this prefix."""
 
     __slots__ = ("stage", "parent", "children", "pipelines", "persist",
                  "cold_s", "warm_s", "cache_hit")
 
-    def __init__(self, stage: Transformer | None, parent: "PlanNode | None"):
+    def __init__(self, stage: "ir.Op | None", parent: "PlanNode | None"):
         self.stage = stage
         self.parent = parent
         self.children: dict = {}        # stage.key() -> PlanNode
@@ -172,7 +179,7 @@ class PlanNode:
         return d
 
     def label(self) -> str:
-        return type(self.stage).__name__ if self.stage is not None else "<root>"
+        return self.stage.label() if self.stage is not None else "<root>"
 
 
 class ExperimentPlan:
@@ -187,12 +194,16 @@ class ExperimentPlan:
                  *, optimize: bool = True):
         self.backend = backend
         self.pipelines = list(pipelines)
-        #: per-pipeline rewrite traces [(rule, before, after), ...]
+        #: per-pipeline rewrite traces [(rule, before_op, after_op), ...]
         self.traces: list[list] = [[] for _ in self.pipelines]
-        self.chains = [
-            stage_chain(optimize_pipeline(p, backend, trace=self.traces[i])
-                        if optimize else p)
-            for i, p in enumerate(self.pipelines)]
+        #: one CSE interning table across all pipelines: shared prefixes
+        #: compile to literally shared IR ops, which is what the trie keys on
+        cse_table: dict = {}
+        self.ops = [compile_pipeline(p, backend, optimize=optimize,
+                                     trace=self.traces[i],
+                                     cse_table=cse_table)
+                    for i, p in enumerate(self.pipelines)]
+        self.chains = [ir.chain(op) for op in self.ops]
         self.root = PlanNode(None, None)
         self.root.persist = "root"
         self._leaves: list[PlanNode] = []

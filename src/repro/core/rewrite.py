@@ -1,211 +1,44 @@
-"""Graph rewriting: semantics-preserving pipeline optimisation (paper §4).
+"""Pipeline optimisation entry point — thin shim over the IR pass manager.
 
-The rewriter applies *equivalence rules* bottom-up to a fixpoint.  Rules
-consult the backend capability descriptor, mirroring how PyTerrier compiles
-``Retrieve % 10`` into an Anserini BlockMaxWAND call and
-``Retrieve >> (Extract ** Extract)`` into a Terrier fat-postings pass.
-Associativity/commutativity is handled by the canonical variadic node forms
-(see transformer.py) — structural matching replaces MatchPy.
-
-Rules (★ = beyond-paper):
-  cutoff_merge       %K1 %K2                    -> %min(K1,K2)
-  cutoff_into_then   (A >> B) % K               -> A >> (B % K)
-  cutoff_scale_swap  (α·T) % K                  -> α·(T % K)
-  cutoff_pushdown    Retrieve % K               -> PrunedRetrieve(k=K)   [RQ1]
-  fat_fusion         Retrieve >> (Extract ** …) -> FatRetrieve           [RQ2]
-  extract_fusion     Retrieve >> Extract        -> FatRetrieve(1 feat)
-  linear_fusion ★    Σ wᵢ·Retrieve(mᵢ)          -> MultiRetrieve (1 pass)
-  scale_fold         α(βT) -> (αβ)T ; weights folded into Linear
+The bottom-up fixpoint rewriter that used to live here has been re-expressed
+as typed-IR passes in ``core/passes.py`` (rules: cutoff_merge /
+cutoff_into_then / cutoff_scale_swap / cutoff_pushdown, fat / extract /
+linear fusion, scale_fold — same names, same semantics, now with schema
+inference and a cost-gated kernel-lowering stage behind them).
+``optimize_pipeline`` is kept for external callers and returns a
+``Transformer`` tree as before: it lowers to IR, runs the pass pipeline,
+and raises the result back.
 """
 from __future__ import annotations
 
-from typing import Callable
-
-from repro.core import stages as S
-from repro.core.transformer import (Concat, Cutoff, FeatureUnion, Linear,
-                                    Scale, SetOp, Then, Transformer)
-
-Rule = Callable[[Transformer, "JaxBackend"], Transformer | None]
-RULES: list[tuple[str, Rule]] = []
-
-
-def rule(name: str):
-    def deco(fn):
-        RULES.append((name, fn))
-        return fn
-    return deco
+from repro.core.transformer import Transformer
 
 
 def _clone(node: Transformer, children) -> Transformer:
+    """Shallow-clone ``node`` with new children.
+
+    The clone gets its *own* params dict: ``object.__new__`` +
+    ``__dict__.update`` alone would share the original's ``params`` mapping,
+    so a later in-place mutation of either node's params would silently
+    rewrite the other (and corrupt every structural key derived from it).
+    """
     new = object.__new__(type(node))
     new.__dict__.update(node.__dict__)
+    new.params = dict(node.params)
     new.children = tuple(children)
     return new
 
 
-# ---------------------------------------------------------------------------
-# rules
-# ---------------------------------------------------------------------------
-
-@rule("cutoff_merge")
-def cutoff_merge(node, backend):
-    if isinstance(node, Cutoff) and isinstance(node.children[0], Cutoff):
-        inner = node.children[0]
-        k = min(node.params["k"], inner.params["k"])
-        return Cutoff(children=[inner.children[0]], k=k)
-    return None
-
-
-def _out_kind(node: Transformer) -> str:
-    """Primary output stream of an expression.  A Then of pure query
-    rewrites is itself Q -> Q; any R-producing child makes it "R"."""
-    if isinstance(node, Then):
-        return ("Q" if all(_out_kind(c) == "Q" for c in node.children)
-                else "R")
-    return node.out_kind
-
-
-def _reads_results(node: Transformer) -> bool:
-    if isinstance(node, Then):
-        return any(_reads_results(c) for c in node.children)
-    return node.reads_results
-
-
-@rule("cutoff_into_then")
-def cutoff_into_then(node, backend):
-    """(A >> B) % K -> A >> (B % K), guarded on B's output kind: a rank
-    cutoff is only typed for R-producing expressions.  Trailing Q -> Q
-    rewrites that never read R (SDM, stemming) are hopped over — sound,
-    they cannot observe the truncation — so the cutoff lands on the last
-    R-producing stage and stays eligible for the RQ1 pushdown.  An
-    R-*reading* query rewrite (RM3 reads fb_docs from R) blocks the push:
-    it must see the untruncated result list, and wrapping it in a Cutoff
-    would type a % K against a Q -> Q stage (the unsound pre-fix form)."""
-    if not (isinstance(node, Cutoff) and isinstance(node.children[0], Then)):
-        return None
-    kids = list(node.children[0].children)
-    i = len(kids) - 1
-    while i >= 0 and _out_kind(kids[i]) == "Q" and not _reads_results(kids[i]):
-        i -= 1
-    if i < 0 or _out_kind(kids[i]) != "R":
-        return None
-    last = Cutoff(children=[kids[i]], k=node.params["k"])
-    return Then(children=[*kids[:i], last, *kids[i + 1:]])
-
-
-@rule("cutoff_scale_swap")
-def cutoff_scale_swap(node, backend):
-    if isinstance(node, Cutoff) and isinstance(node.children[0], Scale):
-        sc = node.children[0]
-        if sc.params["alpha"] > 0:
-            inner = Cutoff(children=[sc.children[0]], k=node.params["k"])
-            return Scale(children=[inner], alpha=sc.params["alpha"])
-    return None
-
-
-@rule("cutoff_pushdown")
-def cutoff_pushdown(node, backend):
-    """Retrieve % K -> PrunedRetrieve(K): the RQ1 dynamic-pruning rewrite."""
-    if "pruned_topk" not in backend.capabilities:
-        return None
-    if isinstance(node, Cutoff) and isinstance(node.children[0], S.Retrieve):
-        ret = node.children[0]
-        K = node.params["k"]
-        if ret.params["k"] is None or ret.params["k"] >= K:
-            return S.PrunedRetrieve(model=ret.params["model"], k=K)
-    return None
-
-
-def _as_extract_models(children) -> tuple[str, ...] | None:
-    models = []
-    for c in children:
-        if isinstance(c, S.Extract):
-            models.append(c.params["model"])
-        else:
-            return None
-    return tuple(models)
-
-
-@rule("fat_fusion")
-def fat_fusion(node, backend):
-    """Retrieve >> (Extract ** ... ** Extract) -> FatRetrieve: RQ2."""
-    if "fat" not in backend.capabilities or not isinstance(node, Then):
-        return None
-    kids = list(node.children)
-    for i in range(len(kids) - 1):
-        a, b = kids[i], kids[i + 1]
-        if not isinstance(a, S.Retrieve):
-            continue
-        if isinstance(b, FeatureUnion):
-            models = _as_extract_models(b.children)
-        elif isinstance(b, S.Extract):
-            models = (b.params["model"],)
-        else:
-            continue
-        if models is None:
-            continue
-        fat = S.FatRetrieve(model=a.params["model"], features=models,
-                            k=a.params["k"])
-        new_kids = kids[:i] + [fat] + kids[i + 2:]
-        return new_kids[0] if len(new_kids) == 1 else Then(children=new_kids)
-    return None
-
-
-@rule("linear_fusion")
-def linear_fusion(node, backend):
-    """★ Σ wᵢ·Retrieve(mᵢ, k) on one index -> MultiRetrieve: one postings
-    pass instead of N (beyond-paper rewrite enabled by score_all)."""
-    if "multi_model" not in backend.capabilities or not isinstance(node, Linear):
-        return None
-    ks = set()
-    models = []
-    for c in node.children:
-        if not isinstance(c, S.Retrieve):
-            return None
-        ks.add(c.params["k"])
-        models.append(c.params["model"])
-    if len(ks) != 1 or len(models) < 2:
-        return None
-    return S.MultiRetrieve(models=tuple(models),
-                           weights=tuple(node.params["weights"]),
-                           k=ks.pop())
-
-
-@rule("scale_fold")
-def scale_fold(node, backend):
-    if isinstance(node, Scale):
-        inner = node.children[0]
-        a = node.params["alpha"]
-        if a == 1.0:
-            return inner
-        if isinstance(inner, (Scale, Linear)):
-            return Scale.of(a, inner)   # re-canonicalise
-    return None
-
-
-# ---------------------------------------------------------------------------
-# engine
-# ---------------------------------------------------------------------------
-
 def optimize_pipeline(root: Transformer, backend, *, max_iters: int = 20,
                       trace: list | None = None) -> Transformer:
-    """Bottom-up rewrite to fixpoint."""
+    """Optimise a pipeline against ``backend``'s capability descriptor.
 
-    def walk(node: Transformer) -> Transformer:
-        new_children = [walk(c) for c in node.children]
-        if any(n is not o for n, o in zip(new_children, node.children)):
-            node = _clone(node, new_children)
-        for name, r in RULES:
-            out = r(node, backend)
-            if out is not None and out.key() != node.key():
-                if trace is not None:
-                    trace.append((name, node, out))
-                return walk(out)
-        return node
-
-    for _ in range(max_iters):
-        new = walk(root)
-        if new.key() == root.key():
-            return new
-        root = new
-    return root
+    Shim over the pass-manager compiler: ``lower -> canonicalise -> schema
+    inference -> rewrite rules -> CSE -> cost-gated fusion -> raise``.
+    ``trace`` (if given) collects ``(rule_name, before_op, after_op)``
+    entries from the rewrite and fusion passes.
+    """
+    from repro.core.ir import raise_ir
+    from repro.core.passes import compile_pipeline
+    return raise_ir(compile_pipeline(root, backend, optimize=True,
+                                     trace=trace))

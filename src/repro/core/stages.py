@@ -119,6 +119,56 @@ class FatRetrieve(Transformer):
                    "features": feats}
 
 
+class FusedTopKRetrieve(Transformer):
+    """``Retrieve >> … % K`` lowered to the streaming top-k kernel path
+    (``kernels/topk``), created by the cost-gated IR lowering pass
+    (core/passes.py).  Exact — same scores as Retrieve, the top-k is just
+    taken at the cutoff depth instead of sort-at-full-k-then-slice."""
+    kind = "fused_topk_retrieve"
+    reads_results = False
+
+    def __init__(self, model: str = "BM25", k: int = 10):
+        super().__init__(model=model, k=int(k))
+
+    def execute(self, ctx, Q, R):
+        k = self.params["k"]
+        model = self.params["model"]
+
+        def one(terms, weights):
+            return RT.retrieve_topk_fused(ctx.backend.index, terms, weights,
+                                          model=model, k=k,
+                                          max_postings=ctx.backend.max_postings)
+
+        docs, scores = ctx.backend.vmap_queries(one, Q, key=self.key())
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
+class FusedFatRetrieve(Transformer):
+    """``Retrieve >> (Extract ** …) % K`` lowered to the fused-scoring
+    kernel path (``kernels/fused_scoring``) at the cutoff depth — the
+    cost-gated kernel form of FatRetrieve % K."""
+    kind = "fused_fat_retrieve"
+    reads_results = False
+
+    def __init__(self, model: str = "BM25",
+                 features: tuple[str, ...] = (), k: int = 10):
+        super().__init__(model=model, features=tuple(features), k=int(k))
+
+    def execute(self, ctx, Q, R):
+        k = self.params["k"]
+
+        def one(terms, weights):
+            return RT.retrieve_fat_fused(
+                ctx.backend.index, terms, weights,
+                rank_model=self.params["model"],
+                feature_models=self.params["features"], k=k,
+                max_postings=ctx.backend.max_postings)
+
+        docs, scores, feats = ctx.backend.vmap_queries(one, Q, key=self.key())
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores,
+                   "features": feats}
+
+
 # ---------------------------------------------------------------------------
 # query rewriting / expansion
 # ---------------------------------------------------------------------------

@@ -21,6 +21,20 @@ from typing import Any, Callable, Sequence
 _UID = itertools.count()
 
 
+def canon_param_items(params: dict) -> tuple:
+    """Canonical hashable view of a params dict — the single definition the
+    Transformer algebra and the typed IR (core/ir.py) both key on, so a
+    lowered op and the node it was lowered from always agree."""
+    items = []
+    for k, v in sorted(params.items()):
+        if isinstance(v, (list, tuple)):
+            v = tuple(v)
+        elif not isinstance(v, (int, float, str, bool, type(None))):
+            v = ("obj", id(v))
+        items.append((k, v))
+    return tuple(items)
+
+
 class Transformer:
     kind: str = "abstract"
     #: stateful nodes (learned rerankers) include a version in their key
@@ -41,15 +55,8 @@ class Transformer:
 
     # -- structural identity (for rewriting + plan/result caching) ---------
     def key(self) -> tuple:
-        items = []
-        for k, v in sorted(self.params.items()):
-            if isinstance(v, (list, tuple)):
-                v = tuple(v)
-            elif not isinstance(v, (int, float, str, bool, type(None))):
-                v = ("obj", id(v))
-            items.append((k, v))
         state = (self.uid, self.version) if self.stateful else ()
-        return (self.kind, tuple(items), state,
+        return (self.kind, canon_param_items(self.params), state,
                 tuple(c.key() for c in self.children))
 
     def __repr__(self):
@@ -67,6 +74,12 @@ class Transformer:
 
     def __call__(self, Q, R=None, **kw):
         return self.transform(Q, R, **kw)
+
+    def explain(self, backend=None, *, optimize: bool = True) -> str:
+        """Render the typed IR of this pipeline before/after each compiler
+        pass (schema annotations included once a backend is given)."""
+        from repro.core.passes import explain_pipeline
+        return explain_pipeline(self, backend, optimize=optimize)
 
     def execute(self, ctx, Q, R):  # overridden by concrete nodes
         raise NotImplementedError(self.kind)

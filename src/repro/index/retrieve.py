@@ -171,6 +171,52 @@ def retrieve_multi(index: InvertedIndex, terms, weights, model_weights, *,
 
 
 # ---------------------------------------------------------------------------
+# kernel-fused retrieval — targets of the IR lowering pass (core/passes.py)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("model", "max_postings", "k"))
+def retrieve_topk_fused(index: InvertedIndex, terms, weights, *, model: str,
+                        k: int, max_postings: int):
+    """``Retrieve >> … % K`` lowered through the streaming top-k kernel:
+    exhaustive scoring feeds ``kernels/topk`` (block-max skipping on TPU,
+    ``lax.top_k`` oracle elsewhere) at the *cutoff* depth K, so the dense
+    [n_docs] score vector is never sorted to the retriever's full k."""
+    from repro.kernels.topk.ops import streaming_topk
+    scores = score_exhaustive(index, terms, weights, model=model,
+                              max_postings=max_postings)
+    vals, idxs = streaming_topk(scores, k=k)
+    return idxs.astype(jnp.int32), vals
+
+
+@partial(jax.jit, static_argnames=("rank_model", "feature_models",
+                                   "max_postings", "k"))
+def retrieve_fat_fused(index: InvertedIndex, terms, weights, *,
+                       rank_model: str, feature_models: tuple[str, ...],
+                       k: int, max_postings: int):
+    """``Retrieve >> (Extract ** …) % K`` lowered through the fused-scoring
+    kernel: one postings gather, every weighting model's math on the same
+    VMEM tile (``kernels/fused_scoring``), candidates cut to K directly."""
+    from repro.kernels.fused_scoring.ops import fused_scoring
+    post = gather_postings(index, terms, max_postings)
+    dl = index.doc_len[post["doc_ids"]]
+    models = (rank_model,) + tuple(feature_models)
+    MAXQ, L = post["tfs"].shape
+    df = jnp.broadcast_to(post["df"][:, None], (MAXQ, L))
+    cf = jnp.broadcast_to(post["cf"][:, None], (MAXQ, L))
+    flat = lambda x: x.reshape(-1)
+    all_s = fused_scoring(flat(post["tfs"]), flat(dl), flat(df), flat(cf),
+                          models=models, stats=index.stats)
+    all_s = all_s.reshape(MAXQ, L, len(models))
+    all_s = all_s * (weights[:, None, None] *
+                     post["mask"][..., None].astype(jnp.float32))
+    dense = jnp.zeros((index.n_docs, len(models)), jnp.float32).at[
+        post["doc_ids"].reshape(-1)].add(all_s.reshape(-1, len(models)))
+    top_s, top_d = jax.lax.top_k(dense[:, 0], k)
+    feats = dense[top_d, 1:]
+    return top_d.astype(jnp.int32), top_s, feats
+
+
+# ---------------------------------------------------------------------------
 # doc-vectors feature extraction — the unoptimised per-feature pass
 # ---------------------------------------------------------------------------
 

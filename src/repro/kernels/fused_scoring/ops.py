@@ -11,6 +11,13 @@ from repro.kernels.fused_scoring.fused_scoring import (BLOCK_P, SUPPORTED,
 from repro.kernels.fused_scoring.ref import fused_scoring_ref
 
 
+def models_supported(models) -> bool:
+    """Whether every weighting model has a kernel implementation — the
+    eligibility predicate the IR fusion pass (core/passes.py) consults
+    before lowering a scorer→cutoff chain onto this kernel."""
+    return all(m in SUPPORTED for m in models)
+
+
 def fused_scoring(tf, dl, df, cf, *, models: tuple[str, ...], stats: dict,
                   impl: str = "auto", interpret: bool = False):
     """[N] postings columns -> [N, F] multi-model scores (one HBM pass)."""

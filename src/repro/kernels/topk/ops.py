@@ -11,6 +11,14 @@ from repro.kernels.topk.topk import BLOCK_S, NEG, streaming_topk_pallas
 MAX_KERNEL_K = 128
 
 
+def kernel_native(k: int) -> bool:
+    """Whether the Pallas kernel itself serves this ``k`` on TPU (larger k
+    falls back to the ``lax.top_k`` oracle).  The IR fusion pass
+    (core/passes.py) records this so gate decisions distinguish
+    kernel-native lowerings from oracle-served ones."""
+    return k <= MAX_KERNEL_K
+
+
 def streaming_topk(scores, *, k: int, block: int = BLOCK_S,
                    impl: str = "auto", interpret: bool = False):
     """Top-k of a score vector with block-max skipping. Returns values

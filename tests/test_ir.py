@@ -1,0 +1,237 @@
+"""Typed IR + pass-manager compiler: round-trip identity, optimisation
+soundness on random pipelines, cost-gated kernel lowering (both gate
+branches), schema validation, and the _clone params regression."""
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (Extract, FatRetrieve, FusedFatRetrieve,
+                        FusedTopKRetrieve, JaxBackend, LTRRerank, Retrieve,
+                        RM3Expand, SchemaError, SDMRewrite, StemRewrite,
+                        compile_pipeline, lower, optimize_pipeline, raise_ir)
+from repro.core.compiler import Context
+from repro.core.plan import ExperimentPlan
+from repro.core.rewrite import _clone
+from repro.core.transformer import Cutoff, Generic, Then
+
+
+def _fused_backend(env, default_k=60):
+    """No dynamic pruning (keeps semantics exact), kernel lowerings on."""
+    return JaxBackend(env["index"], default_k=default_k,
+                      dense=env["backend"].dense,
+                      capabilities=frozenset({"fat", "fused_topk",
+                                              "fused_scoring"}))
+
+
+# ---------------------------------------------------------------------------
+# _clone regression: clones must own their params dict
+# ---------------------------------------------------------------------------
+
+def test_clone_gives_own_params_dict():
+    orig = Retrieve("BM25", k=10)
+    child = Retrieve("QL", k=5)
+    clone = _clone(orig, [child])
+    clone.params["k"] = 999
+    assert orig.params["k"] == 10          # the old _clone shared the dict
+    assert clone.children == (child,)
+    assert orig.children == ()
+
+
+# ---------------------------------------------------------------------------
+# lower -> raise round trip preserves key()
+# ---------------------------------------------------------------------------
+
+def _roundtrip_pipelines():
+    probe = Generic(fn=lambda Q, R: (Q, R))
+    return [
+        Retrieve("BM25", k=20),
+        Retrieve("BM25", k=30) % 10,
+        (Retrieve("BM25", k=30) >> SDMRewrite() >> StemRewrite()) % 10,
+        0.5 * Retrieve("BM25", k=20) + 2.0 * Retrieve("QL", k=20),
+        Retrieve("BM25", k=20) >> (Extract("QL") ** Extract("TF_IDF"))
+        >> LTRRerank(n_features=3),
+        Retrieve("BM25", k=15) | Retrieve("QL", k=15),
+        Retrieve("BM25", k=15) ^ Retrieve("QL", k=15),
+        Retrieve("BM25", k=20) >> RM3Expand(fb_docs=5) >> probe,
+    ]
+
+
+@pytest.mark.parametrize("i", range(8))
+def test_lower_raise_preserves_key(i):
+    pipe = _roundtrip_pipelines()[i]
+    op = lower(pipe)
+    assert op.key() == pipe.key()
+    raised = raise_ir(op)
+    assert raised is pipe                     # untouched IR raises to itself
+    assert raised.key() == pipe.key()
+
+
+def test_op_key_tracks_stateful_descendant_version():
+    """An op whose SUBTREE contains a stateful stage must never cache its
+    key: fit() bumps the stage version, and a stale ancestor key would serve
+    pre-training memo entries."""
+    ltr = LTRRerank(n_features=2)
+    pipe = Retrieve("BM25", k=10) >> ltr
+    op = lower(pipe)
+    k1 = op.key()
+    assert k1 == pipe.key()
+    ltr.version += 1                      # what _fit_local does after fit
+    assert op.key() != k1
+    assert op.key() == pipe.key()
+    # fully stateless subtrees still cache (and stay correct)
+    stateless = lower(Retrieve("BM25", k=10) % 5)
+    assert stateless.key() == stateless.key()
+
+
+# ---------------------------------------------------------------------------
+# random pipelines: optimisation on == off (rankings preserved)
+# ---------------------------------------------------------------------------
+
+_MODELS = ["BM25", "QL", "TF_IDF"]
+
+
+def _random_pipeline(rng: random.Random):
+    k_in = rng.choice([20, 30])
+    p = Retrieve(rng.choice(_MODELS), k=k_in)
+    if rng.random() < 0.4:
+        p = p >> SDMRewrite()
+    if rng.random() < 0.3:
+        p = p >> StemRewrite()
+    r = rng.random()
+    if r < 0.25:
+        p = p >> (Extract("QL") ** Extract("DPH"))
+    elif r < 0.45:
+        q = Retrieve(rng.choice(_MODELS), k=k_in)
+        p = rng.uniform(0.2, 2.0) * p + rng.uniform(0.2, 2.0) * q
+    elif r < 0.6:
+        p = rng.uniform(0.5, 3.0) * p
+    if rng.random() < 0.7:
+        p = p % rng.choice([5, 10])
+    return p
+
+
+def _check_optimized_preserves_rankings(env, seed):
+    be = _fused_backend(env)
+    pipe = _random_pipeline(random.Random(seed))
+    Ro = pipe.transform(env["Q"], backend=be, optimize=True)
+    Ru = pipe.transform(env["Q"], backend=be, optimize=False)
+    np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                  np.asarray(Ru["docids"]))
+    np.testing.assert_allclose(np.asarray(Ro["scores"]),
+                               np.asarray(Ru["scores"]), rtol=1e-4,
+                               atol=1e-5)
+    if "features" in Ro and "features" in Ru:
+        np.testing.assert_allclose(np.asarray(Ro["features"]),
+                                   np.asarray(Ru["features"]), atol=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6))
+    def test_random_pipeline_optimization_sound(small_ir, seed):
+        _check_optimized_preserves_rankings(small_ir, seed)
+
+
+# deterministic fallbacks so coverage survives without hypothesis
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 5, 8, 13, 21])
+def test_random_pipeline_optimization_sound_fixed(small_ir, seed):
+    _check_optimized_preserves_rankings(small_ir, seed)
+
+
+# ---------------------------------------------------------------------------
+# cost-gated kernel lowering: both gate branches
+# ---------------------------------------------------------------------------
+
+def test_cost_gate_fuses_and_falls_back(small_ir):
+    be = _fused_backend(small_ir, default_k=200)
+
+    # deep retrieve + shallow cutoff: fused strictly cheaper -> lowered
+    rep1 = {}
+    op1 = compile_pipeline(Retrieve("BM25", k=200) % 10, be, report=rep1)
+    assert op1.kind == "fused_topk_retrieve"
+    assert isinstance(raise_ir(op1), FusedTopKRetrieve)
+
+    # cutoff at the retrieve depth: nothing to save, the estimate ties and
+    # the gate keeps the unfused interpreter path
+    rep2 = {}
+    op2 = compile_pipeline(Retrieve("BM25", k=10) % 10, be, report=rep2)
+    assert op2.kind == "cutoff"
+    assert isinstance(raise_ir(op2), Cutoff)
+
+    decided = [d["accepted"] for d in
+               rep1["fusion_decisions"] + rep2["fusion_decisions"]]
+    assert True in decided and False in decided    # both branches exercised
+
+    # and both compiled forms agree with the unoptimised semantics
+    for pipe in (Retrieve("BM25", k=200) % 10, Retrieve("BM25", k=10) % 10):
+        Ro = pipe.transform(small_ir["Q"], backend=be, optimize=True)
+        Ru = pipe.transform(small_ir["Q"], backend=be, optimize=False)
+        np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                      np.asarray(Ru["docids"]))
+
+
+def test_fused_topk_lands_after_cutoff_hop(small_ir):
+    """(Retrieve >> SDM) % K on a fused-capable backend: the cutoff hops the
+    Q -> Q stage, then lowers onto the kernel path."""
+    be = _fused_backend(small_ir, default_k=200)
+    opt = optimize_pipeline((Retrieve("BM25", k=200) >> SDMRewrite()) % 10, be)
+    assert isinstance(opt, Then)
+    assert isinstance(opt.children[0], FusedTopKRetrieve)
+    assert opt.children[0].params["k"] == 10
+
+
+def test_fused_fat_retrieve_matches_fat_retrieve(small_ir):
+    """The fused_scoring-kernel fat stage is feature/rank-equivalent to
+    FatRetrieve at the same depth."""
+    env = small_ir
+    be = _fused_backend(env)
+    fat = FatRetrieve(model="BM25", features=("QL", "TF_IDF"), k=15)
+    fus = FusedFatRetrieve(model="BM25", features=("QL", "TF_IDF"), k=15)
+    Ra = fat.transform(env["Q"], backend=be, optimize=False)
+    Rb = fus.transform(env["Q"], backend=be, optimize=False)
+    np.testing.assert_array_equal(np.asarray(Ra["docids"]),
+                                  np.asarray(Rb["docids"]))
+    np.testing.assert_allclose(np.asarray(Ra["scores"]),
+                               np.asarray(Rb["scores"]), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Ra["features"]),
+                               np.asarray(Rb["features"]), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# schema validation + cross-pipeline CSE + explain
+# ---------------------------------------------------------------------------
+
+def test_cutoff_over_pure_query_rewrite_is_schema_error(small_ir):
+    with pytest.raises(SchemaError):
+        optimize_pipeline(SDMRewrite() % 5, small_ir["backend"])
+
+
+def test_plan_cse_shares_prefix_op_instances(small_ir):
+    """The planner's shared CSE table interns separately-built equal
+    prefixes to ONE op instance — the trie keys on literally shared ops."""
+    from repro.core import DenseRerank
+    env = small_ir
+    p1 = Retrieve("BM25", k=20) >> DenseRerank(alpha=0.5)
+    p2 = Retrieve("BM25", k=20) >> DenseRerank(alpha=0.7)
+    plan = ExperimentPlan([p1, p2], env["backend"], optimize=True)
+    assert plan.chains[0][0] is plan.chains[1][0]
+    ctx = Context(env["backend"])
+    plan.execute(env["Q"], ctx=ctx)
+    assert ctx.exec_counts[plan.chains[0][0].key()] == 1
+
+
+def test_explain_renders_passes_and_schemas(small_ir):
+    be = _fused_backend(small_ir, default_k=200)
+    text = (Retrieve("BM25") % 10).explain(be)
+    assert "lowered IR" in text
+    assert "after fusion" in text
+    assert "[R, k=10]" in text
+    assert "fusion gate" in text
