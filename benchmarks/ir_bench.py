@@ -25,9 +25,9 @@ from pathlib import Path
 import numpy as np
 import jax
 
-from repro.core import (Experiment, ExperimentPlan, Extract, FatRetrieve,
-                        PrunedRetrieve, Retrieve, ShardedQueryEngine,
-                        optimize_pipeline)
+from repro.core import (DenseRerank, DenseRetrieve, Experiment,
+                        ExperimentPlan, Extract, FatRetrieve, PrunedRetrieve,
+                        Retrieve, ShardedQueryEngine, optimize_pipeline)
 from repro.core.compiler import Context, JaxBackend, run_pipeline
 from repro.core.data import make_queries
 from repro.launch.mesh import make_query_mesh
@@ -56,6 +56,14 @@ def build_robust_env(n_docs: int = ROBUST_DOCS, n_topics: int = 250,
         "build_s": time.time() - t0,
     }
     return env
+
+
+def topk_overlap(A, B, k: int) -> float:
+    """Mean per-query overlap@k of two docid matrices (the semantics check
+    every fused/pruned-vs-exact comparison reports)."""
+    return float(np.mean([
+        len(set(a[a >= 0].tolist()) & set(b[b >= 0].tolist())) / k
+        for a, b in zip(np.asarray(A), np.asarray(B))]))
 
 
 def _time_pipeline(pipe, Q, backend, *, optimize, repeats=3):
@@ -92,10 +100,7 @@ def bench_rq1(env, k: int = 10, repeats: int = 3) -> list[dict]:
         mrt_opt, R_opt = _time_pipeline(pipe, Q, be_full, optimize=True,
                                         repeats=repeats)
         # semantics check: pruned top-k must overlap the exhaustive top-k
-        overlap = np.mean([
-            len(set(a[a >= 0].tolist()) & set(b[b >= 0].tolist())) / k
-            for a, b in zip(np.asarray(R_orig["docids"]),
-                            np.asarray(R_opt["docids"]))])
+        overlap = topk_overlap(R_orig["docids"], R_opt["docids"], k)
         rows.append({
             "formulation": form, "k": k,
             "terrier_like_mrt_ms": round(mrt_terrier, 2),
@@ -212,10 +217,7 @@ def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
                                    repeats=repeats)
         mrt_u, Ru = _time_pipeline(pipe, Q, be_unfused, optimize=True,
                                    repeats=repeats)
-        overlap = np.mean([
-            len(set(a[a >= 0].tolist()) & set(b[b >= 0].tolist())) / k
-            for a, b in zip(np.asarray(Rf["docids"]),
-                            np.asarray(Ru["docids"]))])
+        overlap = topk_overlap(Rf["docids"], Ru["docids"], k)
         out["workloads"][name] = {
             "fused_stage": op.kind.startswith("fused"),
             "gate_decisions": [
@@ -232,6 +234,72 @@ def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
         }
     out["compile_breakdown_ms"] = {p: round(ms, 2)
                                    for p, ms in breakdown.items()}
+    return out
+
+
+def bench_dense(env, k: int = 10, k_in: int = 200, nprobe: int = 8,
+                repeats: int = 3) -> dict:
+    """Dense second stage (the ROADMAP's top open item): fused vs unfused
+    ``retrieve >> dense_rerank % K`` (the cost-gated FusedDenseRerank
+    lowering) and IVF vs brute-force dense candidate generation (the
+    recall/MRT trade of the coarse quantiser)."""
+    from repro.core import compile_pipeline
+
+    index = env["index"]
+    base = frozenset({"fat", "multi_model"})
+    be_fused = JaxBackend(index, default_k=1000, query_chunk=8,
+                          capabilities=base | {"fused_dense", "dense_topk"})
+    be_unfused = JaxBackend(index, default_k=1000, query_chunk=8,
+                            dense=be_fused.dense, capabilities=base)
+    topics = env["formulations"]["T"]
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    out = {"k": k, "k_in": k_in, "workloads": {}}
+
+    # --- fused vs unfused dense rerank -----------------------------------
+    pipe = (Retrieve("BM25", k=k_in) >> DenseRerank(alpha=0.3)) % k
+    report = {}
+    op = compile_pipeline(pipe, be_fused, report=report)
+    mrt_f, Rf = _time_pipeline(pipe, Q, be_fused, optimize=True,
+                               repeats=repeats)
+    mrt_u, Ru = _time_pipeline(pipe, Q, be_unfused, optimize=True,
+                               repeats=repeats)
+    overlap = topk_overlap(Rf["docids"], Ru["docids"], k)
+    out["workloads"]["dense_rerank_topk"] = {
+        "fused_stage": op.kind == "fused_dense_rerank",
+        "gate_decisions": [
+            {"pattern": d["pattern"], "accepted": d["accepted"],
+             "fused_proxy_s": d["fused_proxy_s"],
+             "unfused_proxy_s": d["unfused_proxy_s"]}
+            for d in report["fusion_decisions"]],
+        "fused_mrt_ms": round(mrt_f, 2),
+        "unfused_mrt_ms": round(mrt_u, 2),
+        "fused_qps": round(1000.0 / mrt_f, 1),
+        "unfused_qps": round(1000.0 / mrt_u, 1),
+        "speedup": round(mrt_u / mrt_f, 2),
+        "topk_overlap": round(float(overlap), 3),
+    }
+
+    # --- IVF vs brute-force candidate generation -------------------------
+    ivf = be_fused.ivf
+    npb = min(nprobe, ivf.n_lists)
+    brute_pipe = DenseRetrieve(k=k, nprobe=0)
+    ivf_pipe = DenseRetrieve(k=k, nprobe=npb)
+    mrt_b, Rb = _time_pipeline(brute_pipe, Q, be_fused, optimize=False,
+                               repeats=repeats)
+    mrt_i, Ri = _time_pipeline(ivf_pipe, Q, be_fused, optimize=False,
+                               repeats=repeats)
+    recall = topk_overlap(Ri["docids"], Rb["docids"], k)
+    out["ivf"] = {
+        "n_lists": ivf.n_lists, "nprobe": npb,
+        "max_list_len": ivf.max_list_len,
+        "brute_mrt_ms": round(mrt_b, 2),
+        "ivf_mrt_ms": round(mrt_i, 2),
+        "brute_qps": round(1000.0 / mrt_b, 1),
+        "ivf_qps": round(1000.0 / mrt_i, 1),
+        "speedup": round(mrt_b / mrt_i, 2),
+        "recall_at_k": round(float(recall), 3),
+    }
     return out
 
 

@@ -129,6 +129,33 @@ def main() -> None:
                 "name": f"fusion_{name}_unfused",
                 "us_per_call": w["unfused_mrt_ms"] * 1000, "derived": ""})
 
+        # --- dense second stage: fused rerank + IVF candidate gen --------
+        dn = ir_bench.bench_dense(env, repeats=args.repeats)
+        (OUT / "dense.json").write_text(json.dumps(dn, indent=1))
+        print("\n== Dense: fused second-stage rerank + IVF (MRT ms/query) ==")
+        for name, w in dn["workloads"].items():
+            print(f"[{name}] {w}")
+            csv_rows.append({
+                "name": f"dense_{name}_fused",
+                "us_per_call": w["fused_mrt_ms"] * 1000,
+                "derived": (f"speedup={w['speedup']}x,"
+                            f"fused_stage={w['fused_stage']},"
+                            f"overlap={w['topk_overlap']}")})
+            csv_rows.append({
+                "name": f"dense_{name}_unfused",
+                "us_per_call": w["unfused_mrt_ms"] * 1000, "derived": ""})
+        print(f"[ivf] {dn['ivf']}")
+        csv_rows.append({
+            "name": "dense_ivf_retrieve",
+            "us_per_call": dn["ivf"]["ivf_mrt_ms"] * 1000,
+            "derived": (f"speedup={dn['ivf']['speedup']}x,"
+                        f"recall={dn['ivf']['recall_at_k']},"
+                        f"nprobe={dn['ivf']['nprobe']}/"
+                        f"{dn['ivf']['n_lists']}")})
+        csv_rows.append({
+            "name": "dense_brute_retrieve",
+            "us_per_call": dn["ivf"]["brute_mrt_ms"] * 1000, "derived": ""})
+
     # --- ENGINE: device-sharded query throughput -------------------------
     if not args.skip_ir:
         eng = run_engine_bench(args.scale, args.repeats)

@@ -13,7 +13,7 @@ from __future__ import annotations
 import json
 import sys
 
-REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2")
+REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense")
 
 
 def main() -> int:
@@ -32,8 +32,16 @@ def main() -> int:
     if not fus:
         print("FAIL: fusion section has no workloads", file=sys.stderr)
         return 1
+    dense = summary["dense"]
+    if not dense.get("workloads"):
+        print("FAIL: dense section has no workloads", file=sys.stderr)
+        return 1
+    if not dense.get("ivf"):
+        print("FAIL: dense section has no ivf report", file=sys.stderr)
+        return 1
     print(f"bench summary OK: sections {list(REQUIRED)} all present; "
-          f"fusion workloads: {sorted(fus)}")
+          f"fusion workloads: {sorted(fus)}; "
+          f"dense workloads: {sorted(dense['workloads'])}")
     return 0
 
 

@@ -1,0 +1,125 @@
+"""Bench-trajectory regression gate: fail CI when fused-path throughput
+regresses against the previous push's bench artifact.
+
+    python scripts/compare_bench.py PREV CUR [--max-regression-pct 25]
+
+``PREV`` is the previous summary — either the JSON file itself or a
+directory the previous ``bench-*`` artifact was unzipped into (the newest
+``summary.json`` / ``BENCH_*.json`` found under it is used).  A missing /
+unreadable PREV is tolerated (first run on a branch, expired artifact):
+the gate prints a note and passes.  ``CUR`` must exist — the current run
+just produced it.
+
+Compared metrics are the fused-path QPS figures the fusion work optimises
+for (``fusion`` + ``dense`` workloads and the IVF probe path); a metric
+present in both summaries that dropped by more than the threshold fails
+the job.  Metrics only present on one side (new workload, renamed section)
+are reported but never fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def fused_qps_metrics(summary: dict) -> dict[str, float]:
+    """name -> QPS for every fused execution path in a bench summary (the
+    gated trajectory; the IVF probe is reported but not gated — it is a
+    recall/MRT trade, not a fused kernel path)."""
+    out: dict[str, float] = {}
+    for section in ("fusion", "dense"):
+        for name, w in (summary.get(section) or {}).get("workloads",
+                                                        {}).items():
+            qps = w.get("fused_qps")
+            if qps is not None:     # 0.0 is a (catastrophic) data point
+                out[f"{section}.{name}.fused_qps"] = float(qps)
+    return out
+
+
+def resolve_summary(path: Path) -> Path | None:
+    """PREV as given, or the newest summary-like JSON under a directory."""
+    if path.is_file():
+        return path
+    if path.is_dir():
+        hits = sorted(list(path.rglob("summary.json")) +
+                      list(path.rglob("BENCH_*.json")),
+                      key=lambda p: p.stat().st_mtime)
+        if hits:
+            return hits[-1]
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous summary.json (file or artifact dir)")
+    ap.add_argument("cur", help="current summary.json")
+    ap.add_argument("--max-regression-pct", type=float, default=25.0)
+    args = ap.parse_args()
+
+    try:
+        cur = json.loads(Path(args.cur).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read current bench summary {args.cur}: {e}",
+              file=sys.stderr)
+        return 1
+
+    prev_path = resolve_summary(Path(args.prev))
+    if prev_path is None:
+        print(f"no previous bench artifact under {args.prev!r}: "
+              "first run on this ref, skipping regression check")
+        return 0
+    try:
+        prev = json.loads(prev_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"previous bench summary {prev_path} unreadable ({e}): "
+              "skipping regression check")
+        return 0
+
+    cur_m = fused_qps_metrics(cur)
+    prev_m = fused_qps_metrics(prev)
+    if not cur_m:
+        print("FAIL: current summary has no fused-path QPS metrics "
+              "(did the fusion/dense sections go missing?)", file=sys.stderr)
+        return 1
+
+    floor = 1.0 - args.max_regression_pct / 100.0
+    failures = []
+    for name in sorted(set(cur_m) | set(prev_m)):
+        p, c = prev_m.get(name), cur_m.get(name)
+        if p is None or c is None:
+            print(f"  {name}: only in {'current' if p is None else 'previous'}"
+                  " summary (not compared)")
+            continue
+        if p == 0.0:
+            print(f"  {name}: prev=0.0 cur={c:.1f} (previous run recorded "
+                  "zero QPS; not gated)")
+            continue
+        delta = 100.0 * (c - p) / p
+        status = "ok"
+        if c < p * floor:
+            status = "REGRESSION"
+            failures.append((name, p, c, delta))
+        print(f"  {name}: prev={p:.1f} cur={c:.1f} ({delta:+.1f}%) {status}")
+    ivf_p = ((prev.get("dense") or {}).get("ivf") or {}).get("ivf_qps")
+    ivf_c = ((cur.get("dense") or {}).get("ivf") or {}).get("ivf_qps")
+    if ivf_p and ivf_c:
+        print(f"  dense.ivf.ivf_qps: prev={ivf_p:.1f} cur={ivf_c:.1f} "
+              f"({100.0 * (ivf_c - ivf_p) / ivf_p:+.1f}%) informational")
+    if failures:
+        print(f"FAIL: fused-path QPS regressed more than "
+              f"{args.max_regression_pct:.0f}% vs {prev_path}:",
+              file=sys.stderr)
+        for name, p, c, delta in failures:
+            print(f"  {name}: {p:.1f} -> {c:.1f} ({delta:+.1f}%)",
+                  file=sys.stderr)
+        return 1
+    print(f"bench trajectory OK vs {prev_path} "
+          f"({len(cur_m)} fused-path metrics within "
+          f"{args.max_regression_pct:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

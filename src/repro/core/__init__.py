@@ -14,8 +14,10 @@ from repro.core.ir import Op, Schema, SchemaError, lower, raise_ir  # noqa: F401
 from repro.core.passes import compile_pipeline, explain_pipeline  # noqa: F401
 from repro.core.plan import ArtifactCache, ExperimentPlan  # noqa: F401
 from repro.core.rewrite import optimize_pipeline  # noqa: F401
-from repro.core.stages import (DenseRerank, Extract, FatRetrieve,  # noqa: F401
-                               FusedFatRetrieve, FusedTopKRetrieve,
-                               LTRRerank, MultiRetrieve, PrunedRetrieve,
-                               Retrieve, RM3Expand, SDMRewrite, StemRewrite)
+from repro.core.stages import (DenseRerank, DenseRetrieve,  # noqa: F401
+                               Extract, FatRetrieve, FusedDenseRerank,
+                               FusedDenseRetrieve, FusedFatRetrieve,
+                               FusedTopKRetrieve, LTRRerank, MultiRetrieve,
+                               PrunedRetrieve, Retrieve, RM3Expand,
+                               SDMRewrite, StemRewrite)
 from repro.core.transformer import Transformer  # noqa: F401

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import os
 import weakref
 
@@ -38,15 +39,22 @@ from repro.index.inverted import BLOCK, InvertedIndex
 # backend
 # ---------------------------------------------------------------------------
 
+#: monotonic backend ids for engine jit-cache scoping (id() would recycle)
+_BACKEND_UID = itertools.count()
+
+
 class JaxBackend:
     """Execution backend over the JAX-native index (capability descriptor +
     sharded bucketed query execution + query embedding)."""
 
     #: capabilities consulted by the rewrite/fusion passes (paper §4: BMW
     #: cutoff on Anserini; fat postings on Terrier — our backend supports
-    #: all, plus the Pallas kernel lowerings the fusion pass cost-gates)
+    #: all, plus the Pallas kernel lowerings the fusion pass cost-gates:
+    #: fused_topk/fused_scoring for the sparse stage, dense_topk/fused_dense
+    #: for the dense second stage)
     CAPABILITIES = frozenset({"pruned_topk", "fat", "multi_model",
-                              "fused_topk", "fused_scoring"})
+                              "fused_topk", "fused_scoring", "dense_topk",
+                              "fused_dense"})
 
     def __init__(self, index: InvertedIndex, dense: DenseIndex | None = None,
                  *, default_k: int = 1000, query_chunk: int = 16,
@@ -54,8 +62,10 @@ class JaxBackend:
                  capabilities: frozenset | None = None, seed: int = 0,
                  sharded: bool | None = None,
                  engine: ShardedQueryEngine | None = None,
-                 bucket_ladder=None):
+                 bucket_ladder=None, ivf=None, ivf_lists: int | None = None,
+                 ivf_iters: int = 6, ivf_seed: int = 0):
         self.index = index
+        self.uid = next(_BACKEND_UID)
         self.default_k = min(default_k, index.n_docs)
         self.query_chunk = query_chunk
         self.capabilities = (self.CAPABILITIES if capabilities is None
@@ -67,6 +77,16 @@ class JaxBackend:
         self.max_blocks_per_term = self.max_postings // BLOCK
         self.total_blocks = int(index.doc_ids.shape[0]) // BLOCK
         self.dense = dense if dense is not None else build_dense_index(index)
+        # IVF-flat config: the index itself is built lazily on first dense
+        # retrieval (a pure function of dense.emb + these statics, which is
+        # what lets plan.backend_digest key it by config, not contents)
+        self._ivf = ivf
+        #: an externally supplied IVF is digested by content (its arrays are
+        #: not derivable from the backend's own config)
+        self._ivf_external = ivf is not None
+        self.ivf_lists = ivf_lists
+        self.ivf_iters = ivf_iters
+        self.ivf_seed = ivf_seed
         rng = np.random.default_rng(seed)
         self._qproj = jnp.asarray(
             rng.standard_normal((index.vocab, self.dense.dim)).astype(np.float32)
@@ -79,15 +99,31 @@ class JaxBackend:
                        else ShardedQueryEngine(ladder=bucket_ladder)
                        if sharded else None)
 
+    @property
+    def ivf(self):
+        """IVF-flat dense index (``repro.index.dense.IVFDenseIndex``),
+        built on first use from the dense embeddings + the backend's
+        ``ivf_*`` config."""
+        if self._ivf is None:
+            from repro.index.dense import build_ivf_index
+            self._ivf = build_ivf_index(self.dense, n_lists=self.ivf_lists,
+                                        iters=self.ivf_iters,
+                                        seed=self.ivf_seed)
+        return self._ivf
+
     # -- query-axis execution ----------------------------------------------
     def vmap_queries(self, fn, Q, *extra, key=None):
         """vmap ``fn(terms, weights, *extra_i)`` over queries.  If Q is None,
         ``fn(*extra_i)`` is mapped over the extra arrays.  Routed through the
         sharded bucketed engine when one is attached (the default); ``key``
         (a stage's structural key) names the engine's persistent jit-cache
-        entry.  Falls back to the sequential single-device chunked loop."""
+        entry, scoped by this backend's uid — stage keys do not embed index
+        contents, so on an engine shared across backends an unscoped key
+        would serve one backend's closure-captured index/embeddings to the
+        other.  Falls back to the sequential single-device chunked loop."""
         if self.engine is not None:
-            return self.engine.run(StageProgram(key=key, fn=fn), Q, *extra)
+            scoped = None if key is None else (self.uid, key)
+            return self.engine.run(StageProgram(key=scoped, fn=fn), Q, *extra)
         return self.vmap_queries_sequential(fn, Q, *extra)
 
     def vmap_queries_sequential(self, fn, Q, *extra):
@@ -395,8 +431,10 @@ def _execute(op, ctx: Context, Q, R, tok: str | None = None):
 def run_pipeline(node: Transformer | Op, Q, R=None, *, backend: JaxBackend,
                  optimize: bool = True, ctx: Context | None = None):
     from repro.core.passes import compile_pipeline
-    op = node if isinstance(node, Op) else \
-        compile_pipeline(node, backend, optimize=optimize)
+    # Op inputs go through the same compile path (the passes are idempotent
+    # on already-compiled IR): skipping it would silently drop optimisation
+    # AND schema validation exactly when the caller hands over raw IR
+    op = compile_pipeline(node, backend, optimize=optimize)
     ctx = ctx or Context(backend)
     Q2, R2, _ = _execute(op, ctx, Q, R)
     return R2 if R2 is not None else Q2

@@ -61,14 +61,17 @@ def default_bucket_ladder(n_devices: int, *, base: int = 8,
 
 @dataclasses.dataclass(frozen=True)
 class StageProgram:
-    """The engine's unit of execution: a per-query function plus the typed-IR
-    content key (``Op.key()``) that names its persistent jit-cache entry.
+    """The engine's unit of execution: a per-query function plus the key
+    that names its persistent jit-cache entry.
 
-    The key fully determines ``fn``'s behaviour (IR op keys embed every
-    static param, and stateful stages embed a version marker), which is the
-    soundness contract the jit cache relies on: two programs presenting the
-    same key may share one compiled executable.  ``key=None`` marks an
-    anonymous program that compiles fresh and stays out of the cache.
+    The key must fully determine ``fn``'s behaviour — that is the soundness
+    contract the jit cache relies on: two programs presenting the same key
+    may share one compiled executable.  A typed-IR content key (``Op.key()``)
+    embeds every static param and stateful-stage version marker but NOT the
+    backend's array contents (index, embeddings), which ``fn`` closes over —
+    so ``JaxBackend.vmap_queries`` scopes the key by a per-backend uid
+    before it reaches the engine.  ``key=None`` marks an anonymous program
+    that compiles fresh and stays out of the cache.
     """
     key: Any
     fn: Callable

@@ -69,6 +69,8 @@ class Schema:
 
 #: combinator kinds executed structurally by the compiler (inputs + params
 #: fully define them); every other kind is a leaf stage executed via ``ref``
+#: (retrieve / fat_retrieve / dense_retrieve / dense_rerank / ... plus the
+#: fused_* kinds the cost-gated fusion pass lowers chains onto)
 COMBINATOR_KINDS = frozenset({
     "then", "linear", "scale", "cutoff", "setop", "concat", "feature_union",
 })

@@ -21,9 +21,13 @@ an explicit ordered pipeline of IR-to-IR passes:
                         with literally shared prefix ops
   fusion              — cost-gated lowering to the Pallas kernel paths:
                         ``cutoff(retrieve)`` -> FusedTopKRetrieve
-                        (kernels/topk) and ``cutoff(fat_retrieve)`` ->
-                        FusedFatRetrieve (kernels/fused_scoring), accepted
-                        only when the HLO cost model
+                        (kernels/topk), ``cutoff(fat_retrieve)`` ->
+                        FusedFatRetrieve (kernels/fused_scoring),
+                        ``cutoff(dense_retrieve)`` -> FusedDenseRetrieve
+                        and ``retrieve >> cutoff(dense_rerank)`` ->
+                        FusedDenseRerank (kernels/dense_scoring, behind the
+                        ``dense_topk`` / ``fused_dense`` capabilities),
+                        accepted only when the HLO cost model
                         (:func:`repro.analysis.hlo_cost.estimate_callable`)
                         prices the fused form strictly cheaper; otherwise
                         the unfused interpreter path is kept
@@ -54,7 +58,8 @@ GATE_MAXQ = 8
 # ---------------------------------------------------------------------------
 
 _RETRIEVER_KINDS = frozenset({"retrieve", "pruned_retrieve", "multi_retrieve",
-                              "fused_topk_retrieve"})
+                              "fused_topk_retrieve", "dense_retrieve",
+                              "fused_dense_retrieve", "fused_dense_rerank"})
 _FAT_KINDS = frozenset({"fat_retrieve", "fused_fat_retrieve"})
 
 
@@ -465,17 +470,36 @@ class CSEPass(Pass):
 # cost-gated fusion / kernel lowering
 # ---------------------------------------------------------------------------
 
+def _abstract_sds(tree):
+    import jax
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
 def _abstract_args(backend):
     import jax
     import jax.numpy as jnp
-    idx = jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), backend.index)
+    idx = _abstract_sds(backend.index)
     t = jax.ShapeDtypeStruct((GATE_MAXQ,), jnp.int32)
     w = jax.ShapeDtypeStruct((GATE_MAXQ,), jnp.float32)
     return idx, t, w
 
 
-def _estimate(backend, key, build):
+def _abstract_qvec(backend):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct((backend.dense.dim,), jnp.float32)
+
+
+def _abstract_dense_rerank_args(backend):
+    """(index, doc embeddings, terms, weights, query vector) — the per-query
+    signature of the fused/unfused dense-rerank candidates."""
+    idx, t, w = _abstract_args(backend)
+    emb = _abstract_sds(backend.dense.emb)
+    return idx, emb, t, w, _abstract_qvec(backend)
+
+
+def _estimate(backend, key, build, args):
     """Cost estimate for one candidate per-query program, cached on the
     backend by content key (compilation dominates; estimates are pure
     functions of backend + static params)."""
@@ -485,7 +509,7 @@ def _estimate(backend, key, build):
     from repro.analysis.hlo_cost import estimate_callable
     try:
         fn = build()
-        est = estimate_callable(fn, *_abstract_args(backend))
+        est = estimate_callable(fn, *args)
     except Exception:          # lowering unavailable: never fuse blind
         est = None
     cache[key] = est
@@ -493,11 +517,13 @@ def _estimate(backend, key, build):
 
 
 class FusionPass(Pass):
-    """Lower ``cutoff(retrieve)`` / ``cutoff(fat_retrieve)`` chains onto the
-    Pallas kernel paths, gated by the HLO cost model: the fused candidate
-    must price *strictly* cheaper than the unfused chain it replaces, else
-    the unfused interpreter path is kept.  Every decision (either way) is
-    recorded in ``PassContext.decisions``."""
+    """Lower ``cutoff(retrieve)`` / ``cutoff(fat_retrieve)`` /
+    ``cutoff(dense_retrieve)`` chains — and the two-stage
+    ``retrieve >> cutoff(dense_rerank)`` pattern — onto the Pallas kernel
+    paths, gated by the HLO cost model: the fused candidate must price
+    *strictly* cheaper than the unfused chain it replaces, else the unfused
+    interpreter path is kept.  Every decision (either way) is recorded in
+    ``PassContext.decisions``."""
     name = "fusion"
 
     def run(self, op: Op, pctx: PassContext) -> Op:
@@ -505,6 +531,8 @@ class FusionPass(Pass):
 
     def _walk(self, op: Op, pctx: PassContext) -> Op:
         op = _rebuild(op, [self._walk(i, pctx) for i in op.inputs])
+        if op.kind == "then":
+            return self._fuse_dense_rerank_pairs(op, pctx)
         if op.kind != "cutoff" or not op.inputs[0].is_leaf:
             return op
         inner = op.inputs[0]
@@ -515,11 +543,14 @@ class FusionPass(Pass):
             return op
         from repro.index import retrieve as RT
         mp = be.max_postings
+        if inner.kind == "dense_retrieve" and "dense_topk" in be.capabilities:
+            return self._fuse_dense_retrieve(op, inner, K, k_in, pctx)
         if inner.kind == "retrieve" and "fused_topk" in be.capabilities:
             from repro.kernels.topk.ops import kernel_native
             model = inner.params["model"]
             fused = leaf(S.FusedTopKRetrieve(model=model, k=K))
             if self._gate(pctx, "topk", kernel_native=kernel_native(K),
+                          args=_abstract_args(be),
                           unfused=("topk_unfused", model, k_in, mp),
                           fused=("topk_fused", model, K, mp),
                           build_unfused=lambda: (
@@ -541,6 +572,7 @@ class FusionPass(Pass):
                 return op
             fused = leaf(S.FusedFatRetrieve(model=model, features=feats, k=K))
             if self._gate(pctx, "fat", kernel_native=True,
+                          args=_abstract_args(be),
                           unfused=("fat_unfused", model, feats, k_in, mp),
                           fused=("fat_fused", model, feats, K, mp),
                           build_unfused=lambda: (
@@ -557,11 +589,103 @@ class FusionPass(Pass):
                 return fused
         return op
 
-    def _gate(self, pctx, pattern, *, unfused, fused, build_unfused,
-              build_fused, kernel_native: bool = True) -> bool:
+    # -- dense candidate generation: cutoff(dense_retrieve) -----------------
+    def _fuse_dense_retrieve(self, op: Op, inner: Op, K: int, k_in: int,
+                             pctx: PassContext) -> Op:
+        from repro.index import dense as DN
+        from repro.kernels.dense_scoring.ops import kernel_native
         be = pctx.backend
-        est_u = _estimate(be, unfused, build_unfused)
-        est_f = _estimate(be, fused, build_fused)
+        nprobe = inner.params["nprobe"]
+        fused = leaf(S.FusedDenseRetrieve(k=K, nprobe=nprobe))
+        qv = _abstract_qvec(be)
+        if nprobe:
+            npb = min(nprobe, be.ivf.n_lists)
+            args = (_abstract_sds(be.ivf), qv)
+            build_u = lambda: (lambda ivf, q: DN.ivf_retrieve_topk(
+                ivf, q, k=k_in, nprobe=npb))
+            build_f = lambda: (lambda ivf, q: DN.ivf_retrieve_topk_fused(
+                ivf, q, k=K, nprobe=npb))
+        else:
+            args = (_abstract_sds(be.dense), qv)
+            build_u = lambda: (lambda dn, q: DN.dense_retrieve_exact(
+                dn, q, k=k_in))
+            build_f = lambda: (lambda dn, q: DN.dense_retrieve_exact_fused(
+                dn, q, k=K))
+        if self._gate(pctx, "dense_topk", kernel_native=kernel_native(K),
+                      args=args,
+                      unfused=("dense_topk_unfused", k_in, nprobe),
+                      fused=("dense_topk_fused", K, nprobe),
+                      build_unfused=build_u, build_fused=build_f):
+            pctx.trace.append(("fuse_dense_topk", op, fused))
+            return fused
+        return op
+
+    # -- dense second stage: retrieve >> cutoff(dense_rerank) --------------
+    def _fuse_dense_rerank_pairs(self, op: Op, pctx: PassContext) -> Op:
+        """Within a ``then`` chain, lower each adjacent
+        ``retrieve, cutoff(dense_rerank)`` pair to one FusedDenseRerank
+        stage (the rewrite pass has already pushed the pipeline-level cutoff
+        onto the last R-producer, so the paper's ``bm25 >> neural % K``
+        arrives here in exactly this shape)."""
+        be = pctx.backend
+        if "fused_dense" not in be.capabilities:
+            return op
+        kids = list(op.inputs)
+        changed = False
+        i = 0
+        while i < len(kids) - 1:
+            fused = self._try_dense_rerank_pair(kids[i], kids[i + 1], pctx)
+            if fused is not None:
+                kids[i:i + 2] = [fused]
+                changed = True
+            else:
+                i += 1
+        if not changed:
+            return op
+        return kids[0] if len(kids) == 1 else Op("then", {}, kids)
+
+    def _try_dense_rerank_pair(self, a: Op, b: Op,
+                               pctx: PassContext) -> Op | None:
+        if not (a.kind == "retrieve" and b.kind == "cutoff"
+                and b.inputs[0].kind == "dense_rerank"):
+            return None
+        from repro.index import retrieve as RT
+        from repro.kernels.dense_scoring.ops import kernel_native
+        be = pctx.backend
+        K = b.params["k"]
+        k_in = a.params.get("k") or be.default_k
+        if K > k_in:
+            return None
+        model = a.params["model"]
+        alpha = b.inputs[0].params["alpha"]
+        mp = be.max_postings
+        fused = leaf(S.FusedDenseRerank(model=model, k_in=k_in, k=K,
+                                        alpha=alpha))
+        if self._gate(pctx, "dense_rerank", kernel_native=kernel_native(K),
+                      args=_abstract_dense_rerank_args(be),
+                      unfused=("dense_rerank_unfused", model, k_in, K,
+                               alpha, mp),
+                      fused=("dense_rerank_fused", model, k_in, K,
+                             alpha, mp),
+                      build_unfused=lambda: (
+                          lambda ix, emb, t, w, q: RT.retrieve_dense_rerank(
+                              ix, emb, t, w, q, model=model, k_in=k_in, k=K,
+                              alpha=alpha, max_postings=mp)),
+                      build_fused=lambda: (
+                          lambda ix, emb, t, w, q:
+                          RT.retrieve_dense_rerank_fused(
+                              ix, emb, t, w, q, model=model, k_in=k_in, k=K,
+                              alpha=alpha, max_postings=mp))):
+            pctx.trace.append(("fuse_dense_rerank", Op("then", {}, (a, b)),
+                               fused))
+            return fused
+        return None
+
+    def _gate(self, pctx, pattern, *, unfused, fused, build_unfused,
+              build_fused, args, kernel_native: bool = True) -> bool:
+        be = pctx.backend
+        est_u = _estimate(be, unfused, build_unfused, args)
+        est_f = _estimate(be, fused, build_fused, args)
         accepted = (est_u is not None and est_f is not None
                     and est_f["time_proxy_s"] < est_u["time_proxy_s"])
         pctx.decisions.append({
@@ -578,9 +702,10 @@ class FusionPass(Pass):
 # entry points
 # ---------------------------------------------------------------------------
 
-def default_passes() -> list[Pass]:
+def default_passes(max_rewrite_iters: int = 20) -> list[Pass]:
     return [CanonicalizePass(), SchemaPass("schema_inference"),
-            RewritePass(), CSEPass(), FusionPass(), SchemaPass("schema_check")]
+            RewritePass(max_iters=max_rewrite_iters), CSEPass(), FusionPass(),
+            SchemaPass("schema_check")]
 
 
 def compile_pipeline(node: Transformer | Op, backend, *,
@@ -588,6 +713,7 @@ def compile_pipeline(node: Transformer | Op, backend, *,
                      cse_table: dict | None = None,
                      report: dict | None = None,
                      keep_snapshots: bool = False,
+                     max_rewrite_iters: int = 20,
                      pctx: PassContext | None = None) -> Op:
     """Lower a pipeline to IR and (optionally) run the pass pipeline.
 
@@ -601,7 +727,7 @@ def compile_pipeline(node: Transformer | Op, backend, *,
         return op
     pctx = pctx or PassContext(backend, trace=trace, cse_table=cse_table,
                                keep_snapshots=keep_snapshots)
-    op = PassManager(default_passes()).run(op, pctx)
+    op = PassManager(default_passes(max_rewrite_iters)).run(op, pctx)
     if report is not None:
         report["pass_timings_s"] = list(pctx.timings)
         report["fusion_decisions"] = list(pctx.decisions)

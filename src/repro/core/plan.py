@@ -81,12 +81,20 @@ def backend_digest(backend: JaxBackend) -> str:
     """Content digest of the backend's result-affecting state: the index
     arrays plus the execution config stages resolve at run time (default_k
     for Retrieve(k=None), the dense embeddings and query projection for
-    DenseRerank / embed_queries).  Cached — all of it is immutable once the
-    backend is built."""
+    DenseRerank / embed_queries, the IVF quantiser config for
+    DenseRetrieve).  A lazily built IVF is a pure function of
+    (dense.emb, ivf_* config), so its *config* digests it; an externally
+    supplied IVF is digested by its full contents (centroids alone would
+    alias two hand-built IVFs sharing centroids but not list assignment).
+    Cached — all of it is immutable once the backend is built."""
     dig = getattr(backend, "_content_digest", None)
     if dig is None:
+        ivf_part = (backend.ivf if backend._ivf_external
+                    else (-1 if backend.ivf_lists is None
+                          else backend.ivf_lists,
+                          backend.ivf_iters, backend.ivf_seed))
         dig = content_token((backend.index, backend.default_k,
-                             backend.dense.emb, backend._qproj))
+                             backend.dense.emb, backend._qproj, ivf_part))
         backend._content_digest = dig
     return dig
 

@@ -41,4 +41,5 @@ def optimize_pipeline(root: Transformer, backend, *, max_iters: int = 20,
     from repro.core.ir import raise_ir
     from repro.core.passes import compile_pipeline
     return raise_ir(compile_pipeline(root, backend, optimize=True,
-                                     trace=trace))
+                                     trace=trace,
+                                     max_rewrite_iters=max_iters))

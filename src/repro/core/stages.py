@@ -169,6 +169,92 @@ class FusedFatRetrieve(Transformer):
                    "features": feats}
 
 
+class DenseRetrieve(Transformer):
+    """ANN-style dense candidate generation over the IVF dense index
+    (Q -> R): embed the query, probe the ``nprobe`` closest coarse lists,
+    score only those lists' documents.  ``nprobe=0`` scores every document
+    (exact brute force) — the mode dense equivalence tests pin against."""
+    kind = "dense_retrieve"
+    reads_results = False
+
+    def __init__(self, k: int | None = None, nprobe: int = 8):
+        super().__init__(k=k, nprobe=int(nprobe))
+
+    def execute(self, ctx, Q, R):
+        from repro.index import dense as DN
+        be = ctx.backend
+        k = min(self.params["k"] or be.default_k, be.index.n_docs)
+        nprobe = self.params["nprobe"]
+        qvecs = be.embed_queries(Q)
+        if nprobe:
+            ivf = be.ivf
+            npb = min(nprobe, ivf.n_lists)
+            one = lambda qv: DN.ivf_retrieve_topk(ivf, qv, k=k, nprobe=npb)
+        else:
+            dense = be.dense
+            one = lambda qv: DN.dense_retrieve_exact(dense, qv, k=k)
+        docs, scores = be.vmap_queries(one, None, qvecs, key=self.key())
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
+class FusedDenseRetrieve(Transformer):
+    """``DenseRetrieve % K`` lowered to the blocked-matmul + streaming-top-k
+    kernel path (``kernels/dense_scoring``) at the cutoff depth, created by
+    the cost-gated IR lowering pass (core/passes.py)."""
+    kind = "fused_dense_retrieve"
+    reads_results = False
+
+    def __init__(self, k: int = 10, nprobe: int = 8):
+        super().__init__(k=int(k), nprobe=int(nprobe))
+
+    def execute(self, ctx, Q, R):
+        from repro.index import dense as DN
+        be = ctx.backend
+        k = min(self.params["k"], be.index.n_docs)
+        nprobe = self.params["nprobe"]
+        qvecs = be.embed_queries(Q)
+        if nprobe:
+            ivf = be.ivf
+            npb = min(nprobe, ivf.n_lists)
+            one = lambda qv: DN.ivf_retrieve_topk_fused(ivf, qv, k=k,
+                                                        nprobe=npb)
+        else:
+            dense = be.dense
+            one = lambda qv: DN.dense_retrieve_exact_fused(dense, qv, k=k)
+        docs, scores = be.vmap_queries(one, None, qvecs, key=self.key())
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
+class FusedDenseRerank(Transformer):
+    """``Retrieve >> DenseRerank % K`` lowered to one fused per-query
+    program: sparse candidates at depth ``k_in``, dense re-scoring on the
+    kernel with the sparse score as the additive base, streaming top-k at
+    the cutoff depth ``k`` — the cost-gated kernel form of the dense second
+    stage (core/passes.py)."""
+    kind = "fused_dense_rerank"
+    reads_results = False
+
+    def __init__(self, model: str = "BM25", k_in: int = 1000, k: int = 10,
+                 alpha: float = 0.0):
+        super().__init__(model=model, k_in=int(k_in), k=int(k),
+                         alpha=float(alpha))
+
+    def execute(self, ctx, Q, R):
+        be = ctx.backend
+        p = self.params
+        qvecs = be.embed_queries(Q)
+        emb = be.dense.emb
+
+        def one(terms, weights, qv):
+            return RT.retrieve_dense_rerank_fused(
+                be.index, emb, terms, weights, qv, model=p["model"],
+                k_in=p["k_in"], k=p["k"], alpha=p["alpha"],
+                max_postings=be.max_postings)
+
+        docs, scores = be.vmap_queries(one, Q, qvecs, key=self.key())
+        return Q, {"qid": Q["qid"], "docids": docs, "scores": scores}
+
+
 # ---------------------------------------------------------------------------
 # query rewriting / expansion
 # ---------------------------------------------------------------------------

@@ -1,2 +1,4 @@
 from repro.index.inverted import InvertedIndex, build_index  # noqa: F401
 from repro.index.corpus import synthesize_corpus, synthesize_topics  # noqa: F401
+from repro.index.dense import (DenseIndex, IVFDenseIndex,  # noqa: F401
+                               build_dense_index, build_ivf_index)

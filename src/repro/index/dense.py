@@ -1,9 +1,26 @@
-"""Dense (embedding) index: brute-force chunked-matmul scoring + top-k.
+"""Dense (embedding) index: brute-force chunked-matmul scoring + top-k,
+plus the IVF-flat ANN layout for dense candidate generation.
 
 Used by neural re-rank stages and dense-retrieval transformers.  Document
 embeddings come either from a trained encoder or, for infrastructure tests,
 from deterministic random-projection of term-count vectors (fast, content-
 correlated, no training required).
+
+The IVF-flat index (:class:`IVFDenseIndex`) groups documents by a coarse
+quantiser (spherical k-means over the doc embeddings); a query probes its
+``nprobe`` closest lists and scores only those lists' embeddings — the
+k-dependent-work analogue of block-max pruning for the dense stage.  Search
+comes in two strategies, mirroring ``index/retrieve.py``:
+
+* ``*_topk``        — gather candidates, score with one matmul, oracle
+                      ``lax.top_k``.  The unfused interpreter path.
+* ``*_topk_fused``  — same candidates through the blocked matmul +
+                      streaming top-k Pallas kernel
+                      (``kernels/dense_scoring``) at the *cutoff* depth.
+                      The target of the cost-gated IR lowering.
+
+Both score candidates with the same expression (``emb @ qvec + base``), so
+the fusion gate's HLO proxies tie exactly when nothing is saved.
 """
 from __future__ import annotations
 
@@ -15,6 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index.inverted import InvertedIndex
+
+#: mask score for padded / invalid candidate rows — same constant the
+#: streaming kernels use, so fused and unfused paths rank identically
+NEG = -3.0e38
 
 
 @jax.tree_util.register_pytree_node_class
@@ -75,3 +96,160 @@ def dense_topk(dense: DenseIndex, qvec: jax.Array, *, k: int):
 @jax.jit
 def dense_score(dense: DenseIndex, qvec: jax.Array, docids: jax.Array):
     return jnp.where(docids >= 0, dense.emb[jnp.maximum(docids, 0)] @ qvec, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# IVF-flat ANN index (coarse k-means quantiser + list-ordered flat store)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IVFDenseIndex:
+    """IVF-flat layout over a :class:`DenseIndex`.
+
+    ``emb`` holds the document embeddings *reordered by list* so a probed
+    list is one contiguous gather; ``doc_ids[i]`` maps row ``i`` of the
+    reordered store back to the original document id.  ``list_start`` is the
+    CSR offset array (``[n_lists + 1]``); ``max_list_len`` bounds every
+    list, giving probes a static gather shape.
+    """
+    centroids: jax.Array     # [n_lists, dim] unit-normalised
+    emb: jax.Array           # [D, dim] embeddings in list order
+    doc_ids: jax.Array       # [D] row -> original doc id
+    list_start: jax.Array    # [n_lists + 1] CSR offsets
+    dim: int
+    n_lists: int
+    max_list_len: int
+
+    def tree_flatten(self):
+        return ((self.centroids, self.emb, self.doc_ids, self.list_start),
+                (self.dim, self.n_lists, self.max_list_len))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def default_n_lists(n_docs: int) -> int:
+    """sqrt(D) coarse lists (the usual IVF operating point), capped so tiny
+    corpora still get multi-document lists."""
+    return int(max(1, min(4096, round(n_docs ** 0.5))))
+
+
+def build_ivf_index(dense: DenseIndex, *, n_lists: int | None = None,
+                    iters: int = 6, seed: int = 0,
+                    chunk: int = 1 << 16) -> IVFDenseIndex:
+    """Spherical k-means over the doc embeddings -> IVF-flat index.
+
+    Pure function of (embeddings, config): rebuilding from the same dense
+    index and params yields identical arrays, which is what lets the plan
+    cache digest the IVF by its config instead of its contents.  Host-side
+    numpy with the [D, n_lists] assignment matmul chunked over docs to
+    bound memory at Robust scale.
+    """
+    emb = np.asarray(dense.emb)
+    D = emb.shape[0]
+    n_lists = default_n_lists(D) if n_lists is None else int(n_lists)
+    n_lists = max(1, min(n_lists, D))
+    rng = np.random.default_rng(seed)
+    cent = emb[rng.choice(D, size=n_lists, replace=False)].copy()
+    assign = np.zeros(D, np.int64)
+    for it in range(max(1, iters)):
+        for s in range(0, D, chunk):
+            e = min(s + chunk, D)
+            assign[s:e] = np.argmax(emb[s:e] @ cent.T, axis=1)
+        # per-dim bincount scatter: np.add.at is an unbuffered per-element
+        # loop and would dominate the build at Robust scale
+        sums = np.stack([np.bincount(assign, weights=emb[:, d],
+                                     minlength=n_lists)
+                         for d in range(emb.shape[1])], axis=1)
+        sums = sums.astype(np.float32)
+        norms = np.linalg.norm(sums, axis=1, keepdims=True)
+        # an emptied list keeps its previous centroid (stays probeable)
+        cent = np.where(norms > 1e-9, sums / np.maximum(norms, 1e-9), cent)
+    for s in range(0, D, chunk):
+        e = min(s + chunk, D)
+        assign[s:e] = np.argmax(emb[s:e] @ cent.T, axis=1)
+    order = np.argsort(assign, kind="stable").astype(np.int32)
+    counts = np.bincount(assign, minlength=n_lists)
+    list_start = np.zeros(n_lists + 1, np.int32)
+    list_start[1:] = np.cumsum(counts, dtype=np.int64)
+    return IVFDenseIndex(
+        centroids=jnp.asarray(cent.astype(np.float32)),
+        emb=jnp.asarray(emb[order]),
+        doc_ids=jnp.asarray(order),
+        list_start=jnp.asarray(list_start),
+        dim=dense.dim, n_lists=int(n_lists),
+        max_list_len=int(counts.max()))
+
+
+def _ivf_candidates(ivf: IVFDenseIndex, qvec, *, nprobe: int):
+    """Fixed-shape candidate block for one query: the ``nprobe`` best lists'
+    embeddings [nprobe * L, dim], a NEG-masked base score [nprobe * L], and
+    each row's position into the list-ordered store."""
+    c_scores = ivf.centroids @ qvec
+    _, lists = jax.lax.top_k(c_scores, nprobe)
+    L = ivf.max_list_len
+    start = ivf.list_start[lists]
+    length = ivf.list_start[lists + 1] - start
+    slot = jnp.arange(L, dtype=jnp.int32)
+    valid = slot[None, :] < length[:, None]
+    pos = jnp.minimum(start[:, None] + slot[None, :],
+                      ivf.doc_ids.shape[0] - 1).reshape(-1)
+    base = jnp.where(valid.reshape(-1), 0.0, NEG)
+    return ivf.emb[pos], base, pos
+
+
+def _pad_candidates(emb_c, base, pos, k: int):
+    """Guarantee at least ``k`` candidate rows (tiny nprobe x short lists):
+    padded rows score NEG and surface as docid -1 / -inf."""
+    n = base.shape[0]
+    if n >= k:
+        return emb_c, base, pos
+    pad = k - n
+    return (jnp.pad(emb_c, ((0, pad), (0, 0))),
+            jnp.pad(base, (0, pad), constant_values=NEG),
+            jnp.pad(pos, (0, pad)))
+
+
+def _finish_search(ivf: IVFDenseIndex, pos, vals, idxs):
+    ok = vals > NEG / 2
+    docs = jnp.where(ok, ivf.doc_ids[pos[idxs]], -1)
+    return docs.astype(jnp.int32), jnp.where(ok, vals, -jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe"))
+def ivf_retrieve_topk(ivf: IVFDenseIndex, qvec, *, k: int, nprobe: int):
+    """IVF probe + matmul scoring + oracle top-k (the unfused path)."""
+    from repro.kernels.dense_scoring.ref import dense_topk_ref
+    emb_c, base, pos = _ivf_candidates(ivf, qvec, nprobe=nprobe)
+    emb_c, base, pos = _pad_candidates(emb_c, base, pos, k)
+    vals, idxs = dense_topk_ref(emb_c, qvec, base, k=k)
+    return _finish_search(ivf, pos, vals, idxs)
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe"))
+def ivf_retrieve_topk_fused(ivf: IVFDenseIndex, qvec, *, k: int, nprobe: int):
+    """IVF probe through the blocked-matmul + streaming-top-k kernel at the
+    cutoff depth (``dense_retrieve % K`` lowered by the fusion pass)."""
+    from repro.kernels.dense_scoring.ops import streaming_dense_topk
+    emb_c, base, pos = _ivf_candidates(ivf, qvec, nprobe=nprobe)
+    emb_c, base, pos = _pad_candidates(emb_c, base, pos, k)
+    vals, idxs = streaming_dense_topk(emb_c, qvec, base, k=k)
+    return _finish_search(ivf, pos, vals, idxs)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def dense_retrieve_exact(dense: DenseIndex, qvec, *, k: int):
+    """Brute-force dense top-k over every document (nprobe=0 mode)."""
+    from repro.kernels.dense_scoring.ref import dense_topk_ref
+    vals, idxs = dense_topk_ref(dense.emb, qvec, None, k=k)
+    return idxs.astype(jnp.int32), vals
+
+
+@partial(jax.jit, static_argnames=("k",))
+def dense_retrieve_exact_fused(dense: DenseIndex, qvec, *, k: int):
+    """Brute-force dense top-k through the streaming kernel."""
+    from repro.kernels.dense_scoring.ops import streaming_dense_topk
+    vals, idxs = streaming_dense_topk(dense.emb, qvec, None, k=k)
+    return idxs.astype(jnp.int32), vals

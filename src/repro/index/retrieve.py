@@ -216,6 +216,46 @@ def retrieve_fat_fused(index: InvertedIndex, terms, weights, *,
     return top_d.astype(jnp.int32), top_s, feats
 
 
+@partial(jax.jit, static_argnames=("model", "k_in", "k", "alpha",
+                                   "max_postings"))
+def retrieve_dense_rerank(index: InvertedIndex, emb, terms, weights, qvec, *,
+                          model: str, k_in: int, k: int, alpha: float,
+                          max_postings: int):
+    """The unfused ``Retrieve >> DenseRerank % K`` chain as one per-query
+    program: sparse top-k_in candidates, dense re-scoring
+    (``alpha * sparse + emb @ qvec``), full sort, slice to K.  The fusion
+    gate's unfused pricing candidate — and the semantics the fused form
+    below must reproduce exactly."""
+    docs, scores = retrieve_topk(index, terms, weights, model=model, k=k_in,
+                                 max_postings=max_postings)
+    ds = jnp.where(docs >= 0,
+                   alpha * scores + emb[jnp.maximum(docs, 0)] @ qvec,
+                   -jnp.inf)
+    order = jnp.argsort(-ds)
+    return docs[order][:k].astype(jnp.int32), ds[order][:k]
+
+
+@partial(jax.jit, static_argnames=("model", "k_in", "k", "alpha",
+                                   "max_postings"))
+def retrieve_dense_rerank_fused(index: InvertedIndex, emb, terms, weights,
+                                qvec, *, model: str, k_in: int, k: int,
+                                alpha: float, max_postings: int):
+    """``Retrieve >> DenseRerank % K`` lowered through the dense-scoring
+    kernel: the sparse contribution rides in as the kernel's ``base`` score
+    and the streaming top-k runs at the *cutoff* depth K, so the candidate
+    list is never fully sorted (``kernels/dense_scoring``)."""
+    from repro.index.dense import NEG
+    from repro.kernels.dense_scoring.ops import streaming_dense_topk
+    docs, scores = retrieve_topk(index, terms, weights, model=model, k=k_in,
+                                 max_postings=max_postings)
+    base = jnp.where(docs >= 0, alpha * scores, NEG)
+    vals, idxs = streaming_dense_topk(emb[jnp.maximum(docs, 0)], qvec, base,
+                                      k=k)
+    ok = vals > NEG / 2
+    out_docs = jnp.where(ok, docs[idxs], -1)
+    return out_docs.astype(jnp.int32), jnp.where(ok, vals, -jnp.inf)
+
+
 # ---------------------------------------------------------------------------
 # doc-vectors feature extraction — the unoptimised per-feature pass
 # ---------------------------------------------------------------------------

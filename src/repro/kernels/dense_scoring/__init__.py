@@ -1,0 +1,1 @@
+from repro.kernels.dense_scoring.ops import streaming_dense_topk  # noqa: F401

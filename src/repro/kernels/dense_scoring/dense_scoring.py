@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: blocked query x doc-embedding matmul fused with
+streaming top-k (the dense second-stage hot path).
+
+Candidate generation / re-scoring over a dense index is a matrix-vector
+product ``emb @ qvec`` followed by a rank cutoff.  Unfused, the [N] score
+vector round-trips through HBM and is then fully sorted; this kernel streams
+embedding blocks through VMEM, scores each [BLOCK_D, dim] tile on the MXU,
+adds a per-row ``base`` score (the sparse first-stage contribution of a
+fused rerank, doubling as the validity mask: padded / invalid rows carry
+``NEG``), and merges the block into a running [k] top-k scratch with the
+``streaming_merge`` accumulator shared with ``kernels/topk``.  A block whose
+best fused score is <= the running k-th score is skipped entirely
+(``@pl.when``) — block-max pruning at dense-scoring granularity.
+
+Intended for k <= 128 (the rank-cutoff regime); larger k falls back to the
+``lax.top_k`` oracle in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.topk.topk import NEG, streaming_merge
+
+BLOCK_D = 1024
+
+
+def _kernel(emb_ref, q_ref, base_ref, vals_ref, idxs_ref, *, k, block):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        vals_ref[...] = jnp.full((k,), NEG, jnp.float32)
+        idxs_ref[...] = jnp.full((k,), -1, jnp.int32)
+
+    emb = emb_ref[...].astype(jnp.float32)               # [block, dim]
+    q = q_ref[...].astype(jnp.float32)                   # [dim]
+    scores = jnp.dot(emb, q, preferred_element_type=jnp.float32) \
+        + base_ref[...].astype(jnp.float32)              # [block]
+    gidx = b * block + jax.lax.iota(jnp.int32, block)
+    theta = jnp.min(vals_ref[...])
+
+    @pl.when(jnp.max(scores) > theta)                    # block-max skip
+    def _merge():
+        vals, idxs = streaming_merge(scores, gidx, vals_ref[...],
+                                     idxs_ref[...], k=k)
+        vals_ref[...] = vals
+        idxs_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def dense_topk_pallas(emb, qvec, base, *, k: int, block: int = BLOCK_D,
+                      interpret: bool = False):
+    """emb [N, dim] (N % block == 0), qvec [dim], base [N] ->
+    (values [k], indices [k]) of ``emb @ qvec + base``, sorted descending."""
+    n, dim = emb.shape
+    assert n % block == 0, (n, block)
+    kernel = functools.partial(_kernel, k=k, block=block)
+
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, dim), lambda i: (i, 0)),
+                  pl.BlockSpec((dim,), lambda i: (0,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((k,), lambda i: (0,)),
+                   pl.BlockSpec((k,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((k,), jnp.float32),
+                   jax.ShapeDtypeStruct((k,), jnp.int32)],
+        interpret=interpret,
+    )(emb, qvec, base)
+    order = jnp.argsort(-vals)
+    return vals[order], idxs[order]

@@ -22,6 +22,28 @@ BLOCK_S = 4096
 NEG = -3.0e38  # python float: jnp scalars would be captured as consts
 
 
+def streaming_merge(cand, gidx, vals, idxs, *, k):
+    """Merge a candidate block into the running top-k scratch: k iterations
+    of (argmax over block, argmin over scratch) — pure VPU masks/maxes, no
+    sort.  The streaming accumulator shared by the score-stream kernel here
+    and the dense-scoring kernel (``kernels/dense_scoring``)."""
+
+    def body(_, carry):
+        cand, vals, idxs = carry
+        j = jnp.argmax(cand)
+        m = cand[j]
+        mi = gidx[j]
+        p = jnp.argmin(vals)
+        take = m > vals[p]
+        vals = vals.at[p].set(jnp.where(take, m, vals[p]))
+        idxs = idxs.at[p].set(jnp.where(take, mi, idxs[p]))
+        cand = cand.at[j].set(NEG)
+        return cand, vals, idxs
+
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, (cand, vals, idxs))
+    return vals, idxs
+
+
 def _kernel(scores_ref, vals_ref, idxs_ref, *, k, block, n_blocks):
     b = pl.program_id(0)
 
@@ -37,21 +59,8 @@ def _kernel(scores_ref, vals_ref, idxs_ref, *, k, block, n_blocks):
 
     @pl.when(blk_max > theta)                            # block-max skip
     def _merge():
-        def body(_, carry):
-            cand, vals, idxs = carry
-            j = jnp.argmax(cand)
-            m = cand[j]
-            mi = gidx[j]
-            p = jnp.argmin(vals)
-            take = m > vals[p]
-            vals = vals.at[p].set(jnp.where(take, m, vals[p]))
-            idxs = idxs.at[p].set(jnp.where(take, mi, idxs[p]))
-            cand = cand.at[j].set(NEG)
-            return cand, vals, idxs
-
-        cand0 = blk
-        _, vals, idxs = jax.lax.fori_loop(
-            0, k, body, (cand0, vals_ref[...], idxs_ref[...]))
+        vals, idxs = streaming_merge(blk, gidx, vals_ref[...], idxs_ref[...],
+                                     k=k)
         vals_ref[...] = vals
         idxs_ref[...] = idxs
 

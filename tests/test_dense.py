@@ -1,0 +1,188 @@
+"""Dense second-stage retrieval subsystem: fused-vs-unfused equivalence,
+IVF recall against brute force, the cost gate's both branches, IR round-trip
+key preservation for the dense ops, and engine==sequential equality."""
+import numpy as np
+import pytest
+
+from repro.core import (DenseRerank, DenseRetrieve, FusedDenseRerank,
+                        FusedDenseRetrieve, JaxBackend, Retrieve,
+                        compile_pipeline, lower, raise_ir)
+from repro.core.transformer import Cutoff
+from repro.index.dense import (build_ivf_index, dense_retrieve_exact,
+                               ivf_retrieve_topk)
+
+
+def _dense_backend(env, default_k=60, extra=(), **kw):
+    """Kernel-lowering-capable backend without dynamic pruning (keeps the
+    sparse first stage exact, so dense equivalences are exact too)."""
+    caps = frozenset({"fat", "fused_dense", "dense_topk"}) | set(extra)
+    return JaxBackend(env["index"], default_k=default_k,
+                      dense=env["backend"].dense, capabilities=caps, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FusedDenseRerank == unfused retrieve >> dense_rerank % K (exact mode)
+# ---------------------------------------------------------------------------
+
+def test_fused_dense_rerank_matches_unfused(small_ir):
+    be = _dense_backend(small_ir)
+    pipe = (Retrieve("BM25", k=200) >> DenseRerank(alpha=0.3)) % 10
+    rep = {}
+    op = compile_pipeline(pipe, be, report=rep)
+    assert op.kind == "fused_dense_rerank"
+    assert isinstance(raise_ir(op), FusedDenseRerank)
+    assert op.params == {"model": "BM25", "k_in": 200, "k": 10,
+                         "alpha": 0.3}
+    assert any(d["pattern"] == "dense_rerank" and d["accepted"]
+               for d in rep["fusion_decisions"])
+    Ro = pipe.transform(small_ir["Q"], backend=be, optimize=True)
+    Ru = pipe.transform(small_ir["Q"], backend=be, optimize=False)
+    np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                  np.asarray(Ru["docids"]))
+    np.testing.assert_allclose(np.asarray(Ro["scores"]),
+                               np.asarray(Ru["scores"]), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_dense_rerank_fusion_needs_capability(small_ir):
+    """Without ``fused_dense`` the chain stays interpreted (and still agrees
+    with itself under optimisation)."""
+    be = JaxBackend(small_ir["index"], default_k=60,
+                    dense=small_ir["backend"].dense,
+                    capabilities=frozenset({"fat"}))
+    pipe = (Retrieve("BM25", k=200) >> DenseRerank(alpha=0.3)) % 10
+    op = compile_pipeline(pipe, be)
+    assert "fused_dense_rerank" not in _kinds(op)
+
+
+def _kinds(op):
+    out = [op.kind]
+    for i in op.inputs:
+        out.extend(_kinds(i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cost gate: both branches for the dense candidate-generation pattern
+# ---------------------------------------------------------------------------
+
+def test_dense_retrieve_gate_fuses_and_falls_back(small_ir):
+    be = _dense_backend(small_ir, default_k=200)
+
+    # deep dense retrieve + shallow cutoff: fused strictly cheaper
+    rep1 = {}
+    op1 = compile_pipeline(DenseRetrieve(k=200, nprobe=8) % 10, be,
+                           report=rep1)
+    assert op1.kind == "fused_dense_retrieve"
+    assert isinstance(raise_ir(op1), FusedDenseRetrieve)
+
+    # cutoff at the retrieve depth: the estimates tie and the gate keeps
+    # the unfused interpreter path
+    rep2 = {}
+    op2 = compile_pipeline(DenseRetrieve(k=10, nprobe=8) % 10, be,
+                           report=rep2)
+    assert op2.kind == "cutoff"
+    assert isinstance(raise_ir(op2), Cutoff)
+
+    decided = [d["accepted"] for d in
+               rep1["fusion_decisions"] + rep2["fusion_decisions"]]
+    assert True in decided and False in decided
+
+    for pipe in (DenseRetrieve(k=200, nprobe=8) % 10,
+                 DenseRetrieve(k=10, nprobe=8) % 10,
+                 DenseRetrieve(k=200, nprobe=0) % 10):
+        Ro = pipe.transform(small_ir["Q"], backend=be, optimize=True)
+        Ru = pipe.transform(small_ir["Q"], backend=be, optimize=False)
+        np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                      np.asarray(Ru["docids"]))
+        np.testing.assert_allclose(np.asarray(Ro["scores"]),
+                                   np.asarray(Ru["scores"]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# IVF recall vs brute force
+# ---------------------------------------------------------------------------
+
+def _recall(ivf_docs, brute_docs, k):
+    hits = [len(set(a[a >= 0].tolist()) & set(b[b >= 0].tolist())) / k
+            for a, b in zip(np.asarray(ivf_docs), np.asarray(brute_docs))]
+    return float(np.mean(hits))
+
+
+def test_ivf_recall_vs_brute_force(small_ir):
+    be = small_ir["backend"]
+    ivf = build_ivf_index(be.dense, n_lists=16, seed=0)
+    qvecs = np.asarray(be.embed_queries(small_ir["Q"]))
+    k = 10
+    brute, full, half = [], [], []
+    for qv in qvecs:
+        brute.append(np.asarray(
+            dense_retrieve_exact(be.dense, qv, k=k)[0]))
+        full.append(np.asarray(
+            ivf_retrieve_topk(ivf, qv, k=k, nprobe=ivf.n_lists)[0]))
+        half.append(np.asarray(
+            ivf_retrieve_topk(ivf, qv, k=k, nprobe=ivf.n_lists // 2)[0]))
+    # probing every list scores every document: recall is exactly 1
+    assert _recall(full, brute, k) >= 0.999
+    # a half-width probe keeps most of the true top-k (loose floor: the
+    # quantiser would have to be adversarially bad to miss half)
+    assert _recall(half, brute, k) >= 0.5
+
+
+def test_ivf_lists_partition_documents(small_ir):
+    ivf = build_ivf_index(small_ir["backend"].dense, n_lists=16, seed=0)
+    starts = np.asarray(ivf.list_start)
+    assert starts[0] == 0 and starts[-1] == small_ir["index"].n_docs
+    assert (np.diff(starts) >= 0).all()
+    assert int(np.diff(starts).max()) == ivf.max_list_len
+    assert sorted(np.asarray(ivf.doc_ids).tolist()) == \
+        list(range(small_ir["index"].n_docs))
+
+
+# ---------------------------------------------------------------------------
+# IR round trip preserves key() for the dense ops
+# ---------------------------------------------------------------------------
+
+def _dense_pipelines():
+    return [
+        DenseRetrieve(k=20, nprobe=4),
+        DenseRetrieve(k=30, nprobe=0) % 5,
+        (Retrieve("BM25", k=30) >> DenseRerank(alpha=0.2)) % 10,
+        FusedDenseRetrieve(k=5, nprobe=2),
+        FusedDenseRerank(model="BM25", k_in=30, k=5, alpha=0.1),
+    ]
+
+
+@pytest.mark.parametrize("i", range(5))
+def test_dense_lower_raise_preserves_key(i):
+    pipe = _dense_pipelines()[i]
+    op = lower(pipe)
+    assert op.key() == pipe.key()
+    raised = raise_ir(op)
+    assert raised is pipe
+    assert raised.key() == pipe.key()
+
+
+# ---------------------------------------------------------------------------
+# engine == sequential for dense pipelines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_pipe", [
+    lambda: (Retrieve("BM25", k=60) >> DenseRerank(alpha=0.3)) % 10,
+    lambda: DenseRetrieve(k=20, nprobe=4),
+], ids=["fused_dense_rerank", "dense_retrieve"])
+def test_dense_engine_matches_sequential(small_ir, make_pipe):
+    env = small_ir
+    ivf = build_ivf_index(env["backend"].dense, n_lists=16, seed=0)
+    be_seq = _dense_backend(env, sharded=False, ivf=ivf)
+    be_eng = _dense_backend(env, ivf=ivf)
+    assert be_eng.engine is not None
+    pipe = make_pipe()
+    Rs = pipe.transform(env["Q"], backend=be_seq, optimize=True)
+    Re = pipe.transform(env["Q"], backend=be_eng, optimize=True)
+    np.testing.assert_array_equal(np.asarray(Rs["docids"]),
+                                  np.asarray(Re["docids"]))
+    np.testing.assert_allclose(np.asarray(Rs["scores"]),
+                               np.asarray(Re["scores"]), rtol=1e-5,
+                               atol=1e-6)

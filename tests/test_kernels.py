@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.dense_scoring.ops import streaming_dense_topk
+from repro.kernels.dense_scoring.ref import dense_topk_ref
 from repro.kernels.fused_scoring.ops import fused_scoring
 from repro.kernels.fused_scoring.ref import fused_scoring_ref
 from repro.kernels.topk.ops import streaming_topk
@@ -42,6 +44,25 @@ def test_streaming_topk_sweep(n, k, block):
                             interpret=True)
     v2, i2 = jax.lax.top_k(scores, k)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+    assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
+
+
+@pytest.mark.parametrize("n,dim,k,block,with_base",
+                         [(2048, 64, 10, 1024, False),
+                          (5000, 64, 32, 1024, True),
+                          (700, 32, 16, 512, True),
+                          (4096, 128, 128, 2048, False)])
+def test_streaming_dense_topk_sweep(n, dim, k, block, with_base):
+    rng = np.random.default_rng(n + k)
+    emb = jnp.asarray(rng.standard_normal((n, dim)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal(dim).astype(np.float32))
+    base = (jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            if with_base else None)
+    v1, i1 = streaming_dense_topk(emb, q, base, k=k, block=block,
+                                  impl="pallas", interpret=True)
+    v2, i2 = dense_topk_ref(emb, q, base, k=k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
+                               atol=1e-5)
     assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
 
 
