@@ -58,6 +58,38 @@ def build_robust_env(n_docs: int = ROBUST_DOCS, n_topics: int = 250,
     return env
 
 
+def host_info() -> dict:
+    """Host identity recorded with every calibration entry, so the bench
+    trajectory accumulates measured-vs-predicted data *per host* (gate peak
+    constants are host properties, not code properties)."""
+    import os
+    import platform
+    return {"cpus": os.cpu_count(), "machine": platform.machine(),
+            "node": platform.node()}
+
+
+def gate_calibration(decisions, mrt_fused_ms: float,
+                     mrt_unfused_ms: float) -> dict | None:
+    """Measured-vs-predicted cost-gate ratio for one workload (the ROADMAP
+    calibration item): the gate compares HLO roofline proxies, this records
+    how the proxy ratio tracked the wall-clock ratio so the bench
+    trajectory can fit per-host peak constants later."""
+    usable = [d for d in decisions
+              if d.get("fused_proxy_s") and d.get("unfused_proxy_s")]
+    if not usable or mrt_unfused_ms <= 0:
+        return None
+    d = usable[-1]                  # the decision that shaped this pipeline
+    predicted = d["fused_proxy_s"] / d["unfused_proxy_s"]
+    measured = mrt_fused_ms / mrt_unfused_ms
+    return {
+        "pattern": d["pattern"],
+        "accepted": d["accepted"],
+        "predicted_ratio": round(predicted, 4),
+        "measured_ratio": round(measured, 4),
+        "measured_over_predicted": round(measured / predicted, 4),
+    }
+
+
 def topk_overlap(A, B, k: int) -> float:
     """Mean per-query overlap@k of two docid matrices (the semantics check
     every fused/pruned-vs-exact comparison reports)."""
@@ -206,7 +238,8 @@ def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
         "fat_scorer_topk": (Retrieve("BM25")
                             >> (Extract("QL") ** Extract("TF_IDF"))) % k,
     }
-    out = {"k": k, "workloads": {}, "compile_breakdown_ms": {}}
+    out = {"k": k, "workloads": {}, "compile_breakdown_ms": {},
+           "host": host_info()}
     breakdown: dict[str, float] = {}
     for name, pipe in workloads.items():
         report = {}
@@ -219,6 +252,8 @@ def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
                                    repeats=repeats)
         overlap = topk_overlap(Rf["docids"], Ru["docids"], k)
         out["workloads"][name] = {
+            "calibration": gate_calibration(report["fusion_decisions"],
+                                            mrt_f, mrt_u),
             "fused_stage": op.kind.startswith("fused"),
             "gate_decisions": [
                 {"pattern": d["pattern"], "accepted": d["accepted"],
@@ -254,7 +289,7 @@ def bench_dense(env, k: int = 10, k_in: int = 200, nprobe: int = 8,
     topics = env["formulations"]["T"]
     Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
                      np.asarray(topics.qids))
-    out = {"k": k, "k_in": k_in, "workloads": {}}
+    out = {"k": k, "k_in": k_in, "workloads": {}, "host": host_info()}
 
     # --- fused vs unfused dense rerank -----------------------------------
     pipe = (Retrieve("BM25", k=k_in) >> DenseRerank(alpha=0.3)) % k
@@ -266,6 +301,8 @@ def bench_dense(env, k: int = 10, k_in: int = 200, nprobe: int = 8,
                                repeats=repeats)
     overlap = topk_overlap(Rf["docids"], Ru["docids"], k)
     out["workloads"]["dense_rerank_topk"] = {
+        "calibration": gate_calibration(report["fusion_decisions"],
+                                        mrt_f, mrt_u),
         "fused_stage": op.kind == "fused_dense_rerank",
         "gate_decisions": [
             {"pattern": d["pattern"], "accepted": d["accepted"],

@@ -19,7 +19,7 @@ import subprocess
 import sys
 from pathlib import Path
 
-from benchmarks import ir_bench, kernel_bench, roofline
+from benchmarks import ir_bench, kernel_bench, roofline, serve_bench
 
 OUT = Path("experiments/bench")
 
@@ -155,6 +155,34 @@ def main() -> None:
         csv_rows.append({
             "name": "dense_brute_retrieve",
             "us_per_call": dn["ivf"]["brute_mrt_ms"] * 1000, "derived": ""})
+
+        # --- serving: continuous micro-batching vs naive per-request -----
+        sv = serve_bench.bench_serving(env)
+        (OUT / "serve.json").write_text(json.dumps(sv, indent=1))
+        print("\n== Serve: continuous micro-batching (open-loop Poisson) ==")
+        for name, wl in sv["workloads"].items():
+            print(f"[{name}] capacity {wl['capacity_qps']} "
+                  f"recompiles_after_warmup={wl['recompiles_since_warmup']} "
+                  f"beats_naive_at_saturation="
+                  f"{wl['batched_beats_naive_at_saturation']}")
+            for lvl in wl["levels"]:
+                b, nv = lvl["batched"], lvl["naive"]
+                print(f"  [{lvl['level']}] {b['offered_qps']} q/s offered: "
+                      f"batched p95={b['p95_ms']}ms "
+                      f"tput={b['throughput_qps']} "
+                      f"| naive p95={nv['p95_ms']}ms "
+                      f"tput={nv['throughput_qps']}")
+                csv_rows.append({
+                    "name": f"serve_{name}_{lvl['level']}_batched",
+                    "us_per_call": round(b["p95_ms"] * 1000, 1),
+                    "derived": (f"tput={b['throughput_qps']}q/s,"
+                                f"goodput={b['goodput_qps']}q/s,"
+                                f"batch={b['mean_batch_size']},"
+                                f"offered={b['offered_qps']}q/s")})
+                csv_rows.append({
+                    "name": f"serve_{name}_{lvl['level']}_naive",
+                    "us_per_call": round(nv["p95_ms"] * 1000, 1),
+                    "derived": f"tput={nv['throughput_qps']}q/s"})
 
     # --- ENGINE: device-sharded query throughput -------------------------
     if not args.skip_ir:

@@ -1,0 +1,212 @@
+"""Open-loop serving benchmark: continuous micro-batching vs naive
+per-request execution under Poisson arrivals.
+
+Protocol (open loop — the standard serving methodology): arrival times are
+drawn ahead of time from a Poisson process at several offered-QPS levels; a
+submission thread releases each request at its scheduled instant regardless
+of how the server is doing (so queueing shows up as latency, not reduced
+load); latency is measured from the *intended* arrival.  The naive baseline
+is the same server with ``max_batch=1`` — every request executes alone, in
+arrival order — so the delta isolates exactly the micro-batching policy.
+
+Reported per (workload x offered level): p50/p95/p99 latency, throughput
+(all completions per second of makespan), goodput (completions within the
+SLO), mean batch size, and rejection counts.  Levels are placed relative
+to *measured* capacity — see ``LOAD_LEVELS`` for the placement and why
+light load references naive capacity.  The ``gated`` block names the
+trajectory metrics CI compares across pushes: light-load batched p95
+(``<wl>.light.p95_ms``, lower better), mid-load batched goodput
+(``<wl>.mid.goodput_qps``, higher better — see the comment at the gated
+block for why goodput gates at mid, not saturation), and saturation
+batched throughput (``<wl>.sat.throughput_qps``, higher better).
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--scale small]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import DenseRerank, JaxBackend, Retrieve
+from repro.core.data import make_queries
+from repro.serve import PipelineServer, ServerOverloaded
+from repro.serve.trace import latency_summary
+
+#: offered-load levels as (name, capacity reference, multiplier).  Light
+#: load is placed relative to the NAIVE capacity: with near-empty queues
+#: batches do not fill, so the batched server's effective light-load
+#: capacity is the per-request one — a level at a fraction of *batched*
+#: capacity would already saturate it.  Saturation is relative to batched
+#: capacity so both configurations are past their limit and the comparison
+#: is pure throughput.
+LOAD_LEVELS = (("light", "naive", 0.4),
+               ("mid", "naive", 1.2),
+               ("sat", "batched", 2.0))
+SLO_MS = 250.0
+
+
+def _workloads(k: int = 10, k_in: int = 100) -> dict:
+    return {
+        "bm25_topk": lambda: Retrieve("BM25") % k,
+        "bm25_dense_rerank":
+            lambda: (Retrieve("BM25", k=k_in) >> DenseRerank(alpha=0.3)) % k,
+    }
+
+
+def _rows(Q, n: int, seed: int = 0):
+    """n single-query rows cycled from the topic set, distinct qids."""
+    nq = int(np.asarray(Q["qid"]).shape[0])
+    host = {k: np.asarray(v) for k, v in Q.items()}
+    rng = np.random.default_rng(seed)
+    order = rng.integers(0, nq, n)
+    rows = []
+    for j, i in enumerate(order):
+        row = {k: v[i:i + 1].copy() for k, v in host.items()}
+        row["qid"] = np.asarray([j], np.int32)
+        rows.append(row)
+    return rows
+
+
+def _measure_capacity(server: PipelineServer, rows, *, burst: int = 64) -> float:
+    """Closed-loop capacity: serve a standing burst, steady-state QPS."""
+    for row in rows[:burst]:
+        server.submit(row)
+    server.pump()                                     # warm path
+    t0 = time.monotonic()
+    for row in rows[:burst]:
+        server.submit(row)
+    server.pump()
+    return burst / (time.monotonic() - t0)
+
+
+def _run_level(server: PipelineServer, rows, offered_qps: float,
+               seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / offered_qps, len(rows))
+    arrivals = np.cumsum(gaps)
+    server.start()
+    reqs, n_rejected = [], 0
+    t0 = time.monotonic() + 0.005
+    for row, a in zip(rows, arrivals):
+        dt = t0 + a - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+        try:
+            # no per-request deadline: at saturation every request must
+            # complete so throughput (not shed volume) is what's compared
+            reqs.append((a, server.submit(row, timeout_ms=None)))
+        except ServerOverloaded:
+            n_rejected += 1
+    for _, r in reqs:
+        r.done.wait(timeout=300)
+    server.stop()
+    lat, n_good, t_last = [], 0, t0
+    for a, r in reqs:
+        l_ms = 1000.0 * (r.trace.t_done - (t0 + a))   # open-loop latency
+        lat.append(l_ms)
+        t_last = max(t_last, r.trace.t_done)
+        if l_ms <= SLO_MS:
+            n_good += 1
+    makespan = max(t_last - t0, 1e-9)
+    sizes = [r.trace.batch_size for _, r in reqs]
+    return {
+        "offered_qps": round(offered_qps, 1),
+        "n_requests": len(rows),
+        "rejected": n_rejected,
+        "throughput_qps": round(len(lat) / makespan, 1),
+        "goodput_qps": round(n_good / makespan, 1),
+        "mean_batch_size": (round(sum(sizes) / len(sizes), 2)
+                            if sizes else 0.0),
+        **latency_summary(lat),
+    }
+
+
+def _server(pipe, backend, *, naive: bool) -> PipelineServer:
+    # naive = per-request execution: batches of one, closed immediately.
+    # Caches identical on both sides so the delta is the batching policy.
+    return PipelineServer(pipe, backend, max_queue=4096,
+                          max_wait_ms=0.0 if naive else 4.0,
+                          max_batch=1 if naive else None,
+                          cache_entries=0)
+
+
+def bench_serving(env, *, k: int = 10, k_in: int = 100, seed: int = 0) -> dict:
+    index = env["index"]
+    topics = env["formulations"]["T"]
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    out = {"slo_ms": SLO_MS,
+           "load_levels": [list(lv) for lv in LOAD_LEVELS],
+           "workloads": {}, "gated": {}}
+    dense = None
+    for name, mk in _workloads(k, k_in).items():
+        be = JaxBackend(index, default_k=1000, query_chunk=8, dense=dense)
+        dense = be.dense
+        batched = _server(mk(), be, naive=False)
+        naive = _server(mk(), be, naive=True)
+        warm = batched.warmup(Q)
+        naive.warmup(Q)
+        rows = _rows(Q, 64, seed)
+        cap = {"batched": _measure_capacity(batched, rows),
+               "naive": _measure_capacity(naive, rows)}
+        levels = []
+        for li, (lname, ref, mult) in enumerate(LOAD_LEVELS):
+            offered = max(mult * cap[ref], 2.0)
+            n = int(np.clip(round(offered * 1.2), 32, 192))
+            lvl_rows = _rows(Q, n, seed + 11 * li)
+            levels.append({
+                "level": lname,
+                "offered": f"{mult}x {ref} capacity",
+                "batched": _run_level(batched, lvl_rows, offered, seed + 1),
+                "naive": _run_level(naive, lvl_rows, offered, seed + 2),
+            })
+        sat = levels[-1]
+        mid = levels[1]
+        light = levels[0]
+        wl = {
+            "chain_len": len(batched.chain),
+            "warmup": warm,
+            "recompiles_since_warmup":
+                batched.stats()["recompiles_since_warmup"],
+            "capacity_qps": {k_: round(v, 1) for k_, v in cap.items()},
+            "levels": levels,
+            "batched_beats_naive_at_saturation":
+                (sat["batched"]["throughput_qps"]
+                 > sat["naive"]["throughput_qps"]),
+        }
+        out["workloads"][name] = wl
+        out["gated"][f"{name}.light.p95_ms"] = {
+            "value": light["batched"]["p95_ms"], "better": "lower"}
+        # goodput is gated at MID load: there the batched server runs
+        # comfortably inside the SLO so the value is stable (~offered),
+        # and an SLO-violating batching regression collapses it; at
+        # saturation goodput is queue-position noise on both sides
+        out["gated"][f"{name}.mid.goodput_qps"] = {
+            "value": mid["batched"]["goodput_qps"], "better": "higher"}
+        out["gated"][f"{name}.sat.throughput_qps"] = {
+            "value": sat["batched"]["throughput_qps"], "better": "higher"}
+    return out
+
+
+def main() -> None:
+    from benchmarks.ir_bench import build_robust_env
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["robust", "small"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.scale == "robust":
+        env = build_robust_env(n_topics=50)
+    else:
+        env = build_robust_env(n_docs=20000, n_topics=32, vocab=40000)
+    res = bench_serving(env)
+    print(json.dumps(res, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

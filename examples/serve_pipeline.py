@@ -1,9 +1,12 @@
-"""Serving example: a declarative retrieval pipeline whose re-rank stage is
-an LM served through the continuous-batching scheduler — the paper's
-"neural re-ranker in the pipeline" (CEDR slot) with production serving.
+"""Serving example: the same declarative pipeline run two ways — as an
+offline Experiment, then as a long-lived online service through
+``PipelineServer`` (continuous micro-batching over the compiled pipeline),
+plus an LM generation stage behind the decode continuous batcher.
 
     PYTHONPATH=src python examples/serve_pipeline.py
 """
+import time
+
 import numpy as np
 import jax
 
@@ -11,6 +14,7 @@ from repro.core import DenseRerank, Experiment, JaxBackend, Retrieve, format_tab
 from repro.core.data import make_queries
 from repro.index import build_index, synthesize_corpus, synthesize_topics
 from repro.models import transformer_lm as tlm
+from repro.serve import PipelineServer
 from repro.serve.batching import ContinuousBatcher, Request
 
 
@@ -28,6 +32,27 @@ def main():
                      ["map", "ndcg_cut_10"], backend=backend,
                      names=["bm25@20", "bm25>>dense"], measure_time=True)
     print(format_table(res["table"]))
+
+    # --- the same pipeline as an online service -----------------------------
+    server = PipelineServer(pipe, backend, max_wait_ms=4.0)
+    server.warmup(Q)                     # compile every (stage, bucket) pair
+    server.start()
+    reqs = []
+    for i in range(24):                  # queries arrive one at a time
+        row = {k: np.asarray(v)[i % 12:i % 12 + 1] for k, v in Q.items()}
+        reqs.append(server.submit(row))
+        time.sleep(0.002)
+    results = [r.wait(timeout=30) for r in reqs]
+    server.stop()
+    s = server.stats()
+    print(f"\nserved {s['served']} queries in {s['batches']} micro-batches "
+          f"(mean batch {s['mean_batch_size']}); "
+          f"p50={s['latency_ms']['p50_ms']}ms "
+          f"p95={s['latency_ms']['p95_ms']}ms; "
+          f"cache hit depths {s['cache_hit_depths']}; "
+          f"recompiles after warmup: {s['recompiles_since_warmup']}")
+    top = np.asarray(results[0]["docids"])[0, :5]
+    print(f"rid=1 top-5 docids: {top}")
 
     # --- serving side: LM behind the continuous batcher ---------------------
     cfg = tlm.LMConfig(name="serve-demo", n_layers=2, d_model=64, n_q=4,

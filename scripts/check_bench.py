@@ -13,7 +13,12 @@ from __future__ import annotations
 import json
 import sys
 
-REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense")
+REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense", "serve")
+
+#: every serve workload must report at least this many offered-load levels
+#: (acceptance: p50/p95/p99 at >= 3 levels, batched vs naive)
+SERVE_WORKLOADS = ("bm25_topk", "bm25_dense_rerank")
+SERVE_MIN_LEVELS = 3
 
 
 def main() -> int:
@@ -39,9 +44,41 @@ def main() -> int:
     if not dense.get("ivf"):
         print("FAIL: dense section has no ivf report", file=sys.stderr)
         return 1
+    serve = summary["serve"]
+    sw = serve.get("workloads", {})
+    missing_wl = [w for w in SERVE_WORKLOADS if w not in sw]
+    if missing_wl:
+        print(f"FAIL: serve section is missing workloads {missing_wl} "
+              f"(present: {sorted(sw)})", file=sys.stderr)
+        return 1
+    for name in SERVE_WORKLOADS:
+        levels = sw[name].get("levels", [])
+        if len(levels) < SERVE_MIN_LEVELS:
+            print(f"FAIL: serve workload {name!r} reports {len(levels)} "
+                  f"offered-load levels (< {SERVE_MIN_LEVELS})",
+                  file=sys.stderr)
+            return 1
+        for lvl in levels:
+            for side in ("batched", "naive"):
+                if "p95_ms" not in lvl.get(side, {}):
+                    print(f"FAIL: serve workload {name!r} level "
+                          f"{lvl.get('level')!r} lacks {side} p95_ms",
+                          file=sys.stderr)
+                    return 1
+        if not sw[name].get("batched_beats_naive_at_saturation"):
+            print(f"FAIL: serve workload {name!r}: continuous batching did "
+                  "not beat naive per-request throughput at saturation",
+                  file=sys.stderr)
+            return 1
+    if not serve.get("gated"):
+        print("FAIL: serve section has no gated trajectory metrics",
+              file=sys.stderr)
+        return 1
     print(f"bench summary OK: sections {list(REQUIRED)} all present; "
           f"fusion workloads: {sorted(fus)}; "
-          f"dense workloads: {sorted(dense['workloads'])}")
+          f"dense workloads: {sorted(dense['workloads'])}; "
+          f"serve workloads: {sorted(sw)} "
+          f"({len(sw[SERVE_WORKLOADS[0]]['levels'])} load levels)")
     return 0
 
 

@@ -11,10 +11,14 @@ the gate prints a note and passes.  ``CUR`` must exist — the current run
 just produced it.
 
 Compared metrics are the fused-path QPS figures the fusion work optimises
-for (``fusion`` + ``dense`` workloads and the IVF probe path); a metric
-present in both summaries that dropped by more than the threshold fails
-the job.  Metrics only present on one side (new workload, renamed section)
-are reported but never fail.
+for (``fusion`` + ``dense`` workloads and the IVF probe path) plus the
+serving trajectory (light-load p95 latency and saturation throughput per
+serve workload, from the serve section's ``gated`` block).  A metric
+present in both summaries that regressed by more than the threshold fails
+the job — "regressed" is direction-aware (QPS falling, latency rising).
+Metrics only present on one side (new workload, renamed section) are
+reported but never fail; a whole section missing from PREV (the previous
+artifact predates it) is warned about and skipped, never a crash.
 """
 from __future__ import annotations
 
@@ -24,18 +28,54 @@ import sys
 from pathlib import Path
 
 
-def fused_qps_metrics(summary: dict) -> dict[str, float]:
-    """name -> QPS for every fused execution path in a bench summary (the
-    gated trajectory; the IVF probe is reported but not gated — it is a
-    recall/MRT trade, not a fused kernel path)."""
-    out: dict[str, float] = {}
+def fused_qps_metrics(summary: dict) -> dict[str, tuple[float, str]]:
+    """name -> (QPS, "higher") for every fused execution path in a bench
+    summary (the gated trajectory; the IVF probe is reported but not gated
+    — it is a recall/MRT trade, not a fused kernel path)."""
+    out: dict[str, tuple[float, str]] = {}
     for section in ("fusion", "dense"):
         for name, w in (summary.get(section) or {}).get("workloads",
                                                         {}).items():
             qps = w.get("fused_qps")
             if qps is not None:     # 0.0 is a (catastrophic) data point
-                out[f"{section}.{name}.fused_qps"] = float(qps)
+                out[f"{section}.{name}.fused_qps"] = (float(qps), "higher")
     return out
+
+
+def serve_metrics(summary: dict) -> dict[str, tuple[float, str]]:
+    """name -> (value, direction) for the serving trajectory: the serve
+    bench pre-selects its gated metrics (light-load batched p95, saturation
+    batched throughput) into ``serve.gated`` with an explicit ``better``
+    direction."""
+    out: dict[str, tuple[float, str]] = {}
+    for name, ent in ((summary.get("serve") or {}).get("gated") or {}).items():
+        try:
+            out[f"serve.{name}"] = (float(ent["value"]),
+                                    str(ent.get("better", "higher")))
+        except (TypeError, KeyError, ValueError):
+            print(f"  serve.{name}: malformed gated entry {ent!r} "
+                  "(skipped)")
+    return out
+
+
+def collect_metrics(summary: dict, label: str) -> dict[str, tuple[float, str]]:
+    """All gated metrics of one summary.  Extraction must never take the
+    gate down: a summary written by an older revision (an artifact that
+    predates a section or a schema change) is degraded to 'fewer metrics',
+    with a warning, instead of crashing the job."""
+    out: dict[str, tuple[float, str]] = {}
+    for extract in (fused_qps_metrics, serve_metrics):
+        try:
+            out.update(extract(summary))
+        except Exception as e:      # old-schema artifact: warn and skip
+            print(f"  warning: {extract.__name__} failed on {label} "
+                  f"summary ({e!r}); its metrics are skipped")
+    return out
+
+
+def missing_sections(prev: dict, cur: dict) -> list[str]:
+    return [s for s in ("fusion", "dense", "serve")
+            if cur.get(s) and not prev.get(s)]
 
 
 def resolve_summary(path: Path) -> Path | None:
@@ -77,38 +117,46 @@ def main() -> int:
               "skipping regression check")
         return 0
 
-    cur_m = fused_qps_metrics(cur)
-    prev_m = fused_qps_metrics(prev)
-    if not cur_m:
+    cur_m = collect_metrics(cur, "current")
+    prev_m = collect_metrics(prev, "previous")
+    if not any(n.endswith(".fused_qps") for n in cur_m):
         print("FAIL: current summary has no fused-path QPS metrics "
               "(did the fusion/dense sections go missing?)", file=sys.stderr)
         return 1
+    for section in missing_sections(prev, cur):
+        print(f"  note: previous artifact predates the {section!r} section; "
+              "its metrics are reported but not gated this run")
 
-    floor = 1.0 - args.max_regression_pct / 100.0
+    frac = args.max_regression_pct / 100.0
     failures = []
     for name in sorted(set(cur_m) | set(prev_m)):
-        p, c = prev_m.get(name), cur_m.get(name)
-        if p is None or c is None:
-            print(f"  {name}: only in {'current' if p is None else 'previous'}"
+        pe, ce = prev_m.get(name), cur_m.get(name)
+        if pe is None or ce is None:
+            print(f"  {name}: only in "
+                  f"{'current' if pe is None else 'previous'}"
                   " summary (not compared)")
             continue
+        (p, better), (c, _) = pe, ce
         if p == 0.0:
             print(f"  {name}: prev=0.0 cur={c:.1f} (previous run recorded "
-                  "zero QPS; not gated)")
+                  "zero; not gated)")
             continue
         delta = 100.0 * (c - p) / p
+        regressed = (c < p * (1.0 - frac) if better == "higher"
+                     else c > p * (1.0 + frac))
         status = "ok"
-        if c < p * floor:
+        if regressed:
             status = "REGRESSION"
             failures.append((name, p, c, delta))
-        print(f"  {name}: prev={p:.1f} cur={c:.1f} ({delta:+.1f}%) {status}")
+        print(f"  {name}: prev={p:.1f} cur={c:.1f} ({delta:+.1f}%, "
+              f"{better} is better) {status}")
     ivf_p = ((prev.get("dense") or {}).get("ivf") or {}).get("ivf_qps")
     ivf_c = ((cur.get("dense") or {}).get("ivf") or {}).get("ivf_qps")
     if ivf_p and ivf_c:
         print(f"  dense.ivf.ivf_qps: prev={ivf_p:.1f} cur={ivf_c:.1f} "
               f"({100.0 * (ivf_c - ivf_p) / ivf_p:+.1f}%) informational")
     if failures:
-        print(f"FAIL: fused-path QPS regressed more than "
+        print(f"FAIL: gated bench metrics regressed more than "
               f"{args.max_regression_pct:.0f}% vs {prev_path}:",
               file=sys.stderr)
         for name, p, c, delta in failures:
@@ -116,7 +164,7 @@ def main() -> int:
                   file=sys.stderr)
         return 1
     print(f"bench trajectory OK vs {prev_path} "
-          f"({len(cur_m)} fused-path metrics within "
+          f"({len(cur_m)} gated metrics within "
           f"{args.max_regression_pct:.0f}%)")
     return 0
 

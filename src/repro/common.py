@@ -74,6 +74,86 @@ class Registry:
 
 
 # ---------------------------------------------------------------------------
+# bounded LRU mapping (engine jit/chunk caches, serve-layer stage cache)
+# ---------------------------------------------------------------------------
+
+
+class LRU:
+    """Bounded insertion/access-ordered mapping with eviction + hit counters.
+
+    ``maxsize=None`` disables the bound (plain dict semantics).  A long-lived
+    server touches arbitrarily many (stage, bucket, signature) cache keys, so
+    every cache on that path must be bounded or it leaks; the counters feed
+    ``cache_info()``-style accessors.
+
+    Thread-safe: the serving layer explicitly supports one cache shared by
+    several running servers, and both ``get`` (pop + re-insert) and ``put``
+    (insert + evict-oldest) are compound — two racing evictions would pop
+    the same oldest key and the loser would KeyError without the lock.
+    The lock is reentrant because weakref death callbacks (the engine's
+    chunk cache evicts entries when their source array dies) may fire from
+    GC triggered *inside* a locked method on the same thread.
+    """
+
+    def __init__(self, maxsize: int | None = None):
+        import threading
+        self.maxsize = maxsize
+        self._d: dict = {}
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        with self._lock:
+            try:
+                v = self._d.pop(key)
+            except KeyError:
+                self.misses += 1
+                return default
+            self._d[key] = v      # re-insert = move to most-recent
+            self.hits += 1
+            return v
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._d.pop(key, None)
+            self._d[key] = value
+            if self.maxsize is not None:
+                while len(self._d) > self.maxsize:
+                    self._d.pop(next(iter(self._d)), None)
+                    self.evictions += 1
+
+    def pop(self, key, default=None):
+        with self._lock:
+            return self._d.pop(key, default)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def __contains__(self, key) -> bool:   # no LRU touch, no counter bump
+        with self._lock:
+            return key in self._d
+
+    def values(self) -> list:
+        """Snapshot copy — a live dict view would raise if another thread
+        inserts mid-iteration (stats readers race the serving thread)."""
+        with self._lock:
+            return list(self._d.values())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+
+    def info(self) -> dict:
+        with self._lock:
+            return {"size": len(self._d), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
+
+
+# ---------------------------------------------------------------------------
 # misc
 # ---------------------------------------------------------------------------
 

@@ -131,6 +131,10 @@ class JaxBackend:
         baseline (benchmarks) and escape hatch (REPRO_ENGINE=sequential)."""
         args = ((Q["terms"], Q["weights"]) if Q is not None else ()) + extra
         nq = args[0].shape[0]
+        if nq == 0:
+            # parity with the engine path (chunk_plan raises the same):
+            # nothing downstream can infer output shapes from zero queries
+            raise ValueError("empty query batch")
         c = min(self.query_chunk, nq)
         vf = jax.vmap(fn)
         outs = []

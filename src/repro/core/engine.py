@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import LRU
 from repro.launch.mesh import make_query_mesh
 
 
@@ -88,7 +89,9 @@ class ShardedQueryEngine:
     """
 
     def __init__(self, mesh=None, *, ladder: Sequence[int] | None = None,
-                 max_devices: int | None = None):
+                 max_devices: int | None = None,
+                 max_jit_entries: int | None = 512,
+                 max_chunk_entries: int | None = 64):
         self.mesh = mesh if mesh is not None else make_query_mesh(
             max_devices=max_devices)
         self.n_devices = int(self.mesh.devices.size)
@@ -99,13 +102,24 @@ class ShardedQueryEngine:
                 f"bucket ladder {self.ladder} not divisible by device count "
                 f"{self.n_devices}")
         self._sharding = NamedSharding(self.mesh, P("data"))
-        #: (stage key, bucket, trailing signature) -> jitted vmapped fn
-        self._jit_cache: dict[Any, Callable] = {}
+        #: (stage key, bucket, trailing signature) -> jitted vmapped fn.
+        #: LRU-bounded: a long-lived server touches unboundedly many stage
+        #: keys over its lifetime, and an unbounded dict pins every compiled
+        #: executable forever.  The ladder still bounds recompiles per
+        #: *resident* stage; an evicted entry recompiles on next use.
+        self._jit_cache: LRU = LRU(max_jit_entries)
         #: (stage key, trailing signature) -> number of buckets compiled;
-        #: the bucket ladder bounds every entry by len(self.ladder)
-        self.compiles: dict[Any, int] = {}
-        #: id(full array) -> (weakref, chunk plan, [sharded pieces])
-        self._chunk_cache: dict[int, tuple] = {}
+        #: the bucket ladder bounds every entry by len(self.ladder) while
+        #: the stage's entries stay resident in the jit cache.  Bounded for
+        #: the same stage-key-diversity reason as the jit cache itself;
+        #: the lossless total lives in ``n_compiles_total``.
+        self.compiles: LRU = LRU(None if max_jit_entries is None
+                                 else 4 * max_jit_entries)
+        self.n_compiles_total = 0
+        #: id(full array) -> (weakref, chunk plan, [sharded pieces]).
+        #: LRU-bounded for the same reason (entries also die eagerly with
+        #: their source array via the weakref callback).
+        self._chunk_cache: LRU = LRU(max_chunk_entries)
         self.n_dispatches = 0
         self.n_chunk_cache_hits = 0
         self.n_chunk_cache_misses = 0
@@ -123,8 +137,7 @@ class ShardedQueryEngine:
             plan.append((s, mx, mx))
             s += mx
         rem = nq - s
-        bucket = next((b for b in self.ladder if b >= rem), mx)
-        plan.append((s, rem, bucket))
+        plan.append((s, rem, self.select_bucket(rem)))
         return tuple(plan)
 
     # -- chunk extraction / caching ----------------------------------------
@@ -147,7 +160,7 @@ class ShardedQueryEngine:
                 full, lambda _, k=key: self._chunk_cache.pop(k, None))
         except TypeError:
             return                                # non-weakrefable leaf
-        self._chunk_cache[key] = (ref, plan, pieces)
+        self._chunk_cache.put(key, (ref, plan, pieces))
 
     def _pieces(self, arr, plan):
         """Per-chunk sharded pieces of ``arr``, padded to their buckets.
@@ -175,25 +188,73 @@ class ShardedQueryEngine:
         vf = self._jit_cache.get(jk)
         if vf is None:
             vf = jax.jit(jax.vmap(fn))
-            self._jit_cache[jk] = vf
+            self._jit_cache.put(jk, vf)
             ck = (key, sig)
-            self.compiles[ck] = self.compiles.get(ck, 0) + 1
+            self.compiles.put(ck, (self.compiles.get(ck, 0) or 0) + 1)
+            self.n_compiles_total += 1
         return vf
 
     def max_compiles_per_stage(self) -> int:
         return max(self.compiles.values(), default=0)
 
+    def total_compiles(self) -> int:
+        """Total jit compilations across all stages/buckets, monotone even
+        when per-stage counter entries age out — the serving layer
+        snapshots this at warm-up to assert zero steady-state
+        recompilation."""
+        return self.n_compiles_total
+
     # -- execution ----------------------------------------------------------
+    @staticmethod
+    def _args_of(Q, extra) -> tuple:
+        return ((Q["terms"], Q["weights"]) if Q is not None else ()) + extra
+
+    def select_bucket(self, n: int) -> int:
+        """Smallest ladder bucket covering an ``n``-query micro-batch — the
+        serving scheduler's batch-closure rule (a batch at the largest
+        bucket is 'full'; anything smaller pads up to its covering rung)."""
+        if n <= 0:
+            raise ValueError("empty query batch")
+        if n > self.ladder[-1]:
+            raise ValueError(
+                f"micro-batch of {n} exceeds largest bucket "
+                f"{self.ladder[-1]}; split it (run() chunk-plans big "
+                f"batches automatically)")
+        return next(b for b in self.ladder if b >= n)
+
     def run(self, program: StageProgram, Q, *extra):
         """Execute one IR stage program over the query axis: vmap
         ``program.fn(terms, weights, *extra_i)`` (or ``fn(*extra_i)`` when Q
         is None) sharded/bucketed/async, with ``program.key`` naming the
         persistent jit-cache entry.  Returns full (concatenated, trimmed)
-        arrays; dispatch is fully asynchronous."""
-        key, fn = program.key, program.fn
-        args = ((Q["terms"], Q["weights"]) if Q is not None else ()) + extra
+        arrays; dispatch is fully asynchronous.  Any batch that fits the
+        largest bucket — every serving micro-batch — IS a
+        :meth:`submit_chunk` call; bigger batches chunk-plan and loop the
+        same single-dispatch primitive."""
+        args = self._args_of(Q, extra)
         nq = int(args[0].shape[0])
-        plan = self.chunk_plan(nq)
+        if 0 < nq <= self.ladder[-1]:
+            return self.submit_chunk(program, Q, *extra)
+        return self._run_plan(program, args, self.chunk_plan(nq))
+
+    def submit_chunk(self, program: StageProgram, Q, *extra,
+                     bucket: int | None = None):
+        """Serving entry point: dispatch ONE micro-batch (``n`` <= largest
+        bucket) as a single padded chunk, asynchronously — no whole-batch
+        chunk planning.  ``bucket`` pins the ladder rung (defaults to
+        :meth:`select_bucket`); returns trimmed full arrays like
+        :meth:`run`."""
+        args = self._args_of(Q, extra)
+        nq = int(args[0].shape[0])
+        if bucket is None:
+            bucket = self.select_bucket(nq)
+        elif bucket not in self.ladder or nq > bucket:
+            raise ValueError(f"bucket {bucket} not a ladder rung covering "
+                             f"{nq} queries (ladder {self.ladder})")
+        return self._run_plan(program, args, ((0, nq, bucket),))
+
+    def _run_plan(self, program: StageProgram, args, plan):
+        key, fn = program.key, program.fn
         sig = tuple((tuple(a.shape[1:]), str(a.dtype)) for a in args)
         pieces = [self._pieces(a, plan) for a in args]
         anon_vf = jax.jit(jax.vmap(fn)) if key is None else None
@@ -243,13 +304,26 @@ class ShardedQueryEngine:
         jax.block_until_ready(tree)
         return tree
 
+    def cache_info(self) -> dict:
+        """Sizes/bounds/hit counters of the engine's two bounded caches —
+        surfaced by ``PipelineServer.stats()`` so a long-lived server's
+        memory profile is observable.  ``chunk`` hit/miss counts are the
+        engine's *validated* counters (an LRU entry whose weakref died or
+        whose chunk plan changed counts as a miss)."""
+        jit = self._jit_cache.info()
+        chunk = self._chunk_cache.info()
+        chunk["hits"] = self.n_chunk_cache_hits
+        chunk["misses"] = self.n_chunk_cache_misses
+        return {"jit": jit, "chunk": chunk}
+
     def stats(self) -> dict:
         return {
             "devices": self.n_devices,
             "ladder": list(self.ladder),
             "dispatches": self.n_dispatches,
-            "compiled_variants": sum(self.compiles.values()),
+            "compiled_variants": self.n_compiles_total,
             "max_compiles_per_stage": self.max_compiles_per_stage(),
             "chunk_cache_hits": self.n_chunk_cache_hits,
             "chunk_cache_misses": self.n_chunk_cache_misses,
+            "cache_info": self.cache_info(),
         }

@@ -541,6 +541,11 @@ class FusionPass(Pass):
         k_in = inner.params.get("k") or be.default_k
         if K > k_in:
             return op
+        # gate candidates must lower with legal shapes: clamp to the corpus
+        # size exactly like the stage executors do (top-k cannot return more
+        # entries than documents exist)
+        K = min(K, be.index.n_docs)
+        k_in = min(k_in, be.index.n_docs)
         from repro.index import retrieve as RT
         mp = be.max_postings
         if inner.kind == "dense_retrieve" and "dense_topk" in be.capabilities:
@@ -656,6 +661,8 @@ class FusionPass(Pass):
         k_in = a.params.get("k") or be.default_k
         if K > k_in:
             return None
+        K = min(K, be.index.n_docs)
+        k_in = min(k_in, be.index.n_docs)
         model = a.params["model"]
         alpha = b.inputs[0].params["alpha"]
         mp = be.max_postings

@@ -77,6 +77,26 @@ def persistent_key(node) -> str | None:
     return hashlib.sha256(repr(key).encode()).hexdigest()
 
 
+def chain_prefix_digests(chain: Sequence, *, scope: str = "") -> list[str]:
+    """Cumulative digests of a stage chain's prefixes: ``out[i]`` covers
+    stages ``0..i``.  This is the serving layer's stage-cache key family —
+    the online counterpart of the plan trie's per-node ``persist`` digests,
+    chained the same way but over the *full* structural key, so
+    process-local stages (object-identity params, stateful version markers)
+    participate too.  Only valid in-process while the caller pins the ops
+    (id-bearing keys may alias once the objects die); anything written to
+    disk must go through :func:`persistent_key` instead.  A stateful
+    stage's ``fit()`` bumps its version marker, which changes every digest
+    from that stage onward — built-in invalidation."""
+    out: list[str] = []
+    acc = hashlib.sha256(scope.encode()).hexdigest()
+    for stage in chain:
+        acc = hashlib.sha256(
+            (acc + repr(stage.key())).encode()).hexdigest()
+        out.append(acc)
+    return out
+
+
 def backend_digest(backend: JaxBackend) -> str:
     """Content digest of the backend's result-affecting state: the index
     arrays plus the execution config stages resolve at run time (default_k

@@ -33,7 +33,11 @@ class Retrieve(Transformer):
         super().__init__(model=model, k=k)
 
     def execute(self, ctx, Q, R):
-        k = self.params["k"] or ctx.backend.default_k
+        # clamp to corpus size like the dense stages: lax.top_k cannot take
+        # more entries than exist, and parity across engines requires every
+        # path to clamp identically
+        k = min(self.params["k"] or ctx.backend.default_k,
+                ctx.backend.index.n_docs)
         model = self.params["model"]
 
         def one(terms, weights):
@@ -55,7 +59,7 @@ class PrunedRetrieve(Transformer):
         super().__init__(model=model, k=k, n_terms=n_terms)
 
     def execute(self, ctx, Q, R):
-        k = self.params["k"]
+        k = min(self.params["k"], ctx.backend.index.n_docs)
         model = self.params["model"]
         budget = RT.block_budget(k, self.params["n_terms"])
         budget = min(budget, ctx.backend.total_blocks)
@@ -81,7 +85,8 @@ class MultiRetrieve(Transformer):
         super().__init__(models=tuple(models), weights=tuple(weights), k=k)
 
     def execute(self, ctx, Q, R):
-        k = self.params["k"] or ctx.backend.default_k
+        k = min(self.params["k"] or ctx.backend.default_k,
+                ctx.backend.index.n_docs)
         models = self.params["models"]
         mw = jnp.asarray(self.params["weights"], jnp.float32)
 
@@ -105,7 +110,8 @@ class FatRetrieve(Transformer):
         super().__init__(model=model, features=tuple(features), k=k)
 
     def execute(self, ctx, Q, R):
-        k = self.params["k"] or ctx.backend.default_k
+        k = min(self.params["k"] or ctx.backend.default_k,
+                ctx.backend.index.n_docs)
 
         def one(terms, weights):
             return RT.retrieve_fat(
@@ -131,7 +137,7 @@ class FusedTopKRetrieve(Transformer):
         super().__init__(model=model, k=int(k))
 
     def execute(self, ctx, Q, R):
-        k = self.params["k"]
+        k = min(self.params["k"], ctx.backend.index.n_docs)
         model = self.params["model"]
 
         def one(terms, weights):
@@ -155,7 +161,7 @@ class FusedFatRetrieve(Transformer):
         super().__init__(model=model, features=tuple(features), k=int(k))
 
     def execute(self, ctx, Q, R):
-        k = self.params["k"]
+        k = min(self.params["k"], ctx.backend.index.n_docs)
 
         def one(terms, weights):
             return RT.retrieve_fat_fused(
@@ -242,13 +248,15 @@ class FusedDenseRerank(Transformer):
     def execute(self, ctx, Q, R):
         be = ctx.backend
         p = self.params
+        k_in = min(p["k_in"], be.index.n_docs)
+        k = min(p["k"], be.index.n_docs)
         qvecs = be.embed_queries(Q)
         emb = be.dense.emb
 
         def one(terms, weights, qv):
             return RT.retrieve_dense_rerank_fused(
                 be.index, emb, terms, weights, qv, model=p["model"],
-                k_in=p["k_in"], k=p["k"], alpha=p["alpha"],
+                k_in=k_in, k=k, alpha=p["alpha"],
                 max_postings=be.max_postings)
 
         docs, scores = be.vmap_queries(one, Q, qvecs, key=self.key())

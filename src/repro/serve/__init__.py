@@ -1,0 +1,17 @@
+"""Online serving subsystem: a compiled pipeline as a long-lived service.
+
+    from repro.serve import PipelineServer
+    server = PipelineServer(Retrieve("BM25") % 10, backend)
+    server.warmup(Q_sample)
+    result = server.submit_wait(q_row)
+    print(server.stats())
+
+``repro.serve.batching`` (the LM decode continuous batcher) is a separate,
+heavier module and is intentionally not imported here.
+"""
+from repro.serve.cache import StageResultCache, query_digest  # noqa: F401
+from repro.serve.request import (RequestTimeout, RequestTrace,  # noqa: F401
+                                 ServeRequest, ServerOverloaded)
+from repro.serve.scheduler import Batch, MicroBatchScheduler  # noqa: F401
+from repro.serve.server import PipelineServer  # noqa: F401
+from repro.serve.trace import TraceLog, latency_summary  # noqa: F401

@@ -1,0 +1,140 @@
+"""Stage-keyed result cache for online traffic.
+
+The experiment planner's trie shares pipeline *prefixes* across pipelines
+within one batch execution; this cache shares them across *requests over
+time*: every (pipeline prefix, source query) pair the server has executed
+maps to the (Q, R) state flowing out of that prefix, so a repeated or
+near-duplicate query resumes from the deepest cached prefix instead of
+re-running the whole chain (cf. MacAvaney & Macdonald on precomputation
+dominating pipeline cost).
+
+Keys reuse the planner's machinery (`plan.chain_prefix_digests` chains the
+stages' structural content keys; the query digest hashes the source row's
+terms/weights).  ``qid`` is deliberately excluded from the digest — two
+users issuing the same query share entries — and is re-stamped from the
+requesting row when a cached value is served.
+
+Values are nq==1 row slices of the stage-output pytrees, held as **host
+numpy** arrays.  That choice is load-bearing for latency: row plumbing
+(slice one request out of a batch, re-stack rows into the next batch) must
+NOT be eager jax ops, because every distinct (batch arity, row index)
+shape would trigger a fresh tiny XLA compilation — a compile storm that
+dwarfs the pipeline itself under continuously varying micro-batch sizes.
+numpy slicing/concatenation is plain C.  The store is LRU-bounded
+(``repro.common.LRU``), so a long-lived server's memory is capped
+regardless of traffic diversity.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from repro.common import LRU
+
+
+def query_digest(Q_row) -> str:
+    """Content digest of a single query row's terms+weights (qid excluded:
+    identical queries from different callers must share cache entries)."""
+    h = hashlib.sha256()
+    for name in ("terms", "weights"):
+        a = np.asarray(Q_row[name])
+        h.update(str((a.dtype, a.shape)).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _restamp_qid(part, qid_arr):
+    if part is None:
+        return None
+    out = dict(part)
+    out["qid"] = qid_arr
+    return out
+
+
+class StageResultCache:
+    """(prefix digest, query digest) -> (Q row, R row) after that prefix."""
+
+    def __init__(self, maxsize: int | None = 4096):
+        self.lru = LRU(maxsize)
+        self.enabled = maxsize is None or maxsize > 0
+        #: request-level counters: ONE hit or miss per lookup_deepest call
+        #: (the raw LRU counters would count every probed depth of the
+        #: chain, making 'hit rate' uninterpretable per request)
+        self.hits = 0
+        self.misses = 0
+
+    # -- lookup -------------------------------------------------------------
+    def lookup_deepest(self, prefix_digests, qdigest: str):
+        """Deepest cached prefix for this query: returns ``(depth, value)``
+        where ``depth`` stages are already computed (0 = nothing cached).
+        Scans deep-to-shallow so a full-pipeline hit wins outright."""
+        if not self.enabled:
+            return 0, None
+        for depth in range(len(prefix_digests), 0, -1):
+            key = (prefix_digests[depth - 1], qdigest)
+            if key not in self.lru:      # counter-free probe
+                continue
+            val = self.lru.get(key)      # refreshes recency
+            if val is not None:          # (may have raced an eviction)
+                self.hits += 1
+                return depth, val
+        self.misses += 1
+        return 0, None
+
+    def store(self, prefix_digest: str, qdigest: str, Q_row, R_row) -> None:
+        if self.enabled:
+            self.lru.put((prefix_digest, qdigest), (Q_row, R_row))
+
+    # -- row plumbing (host-side numpy on purpose — see module docstring) ----
+    @staticmethod
+    def to_host(tree):
+        """One device->host conversion for a whole batched pytree; slice
+        rows out of THIS, never out of the device arrays."""
+        import jax
+        return jax.tree.map(np.asarray, tree)
+
+    @staticmethod
+    def row(tree, j: int):
+        """Slice request ``j``'s nq==1 row out of a (host) batched pytree.
+        Copied, not a view: a view would pin the entire (padded) batch
+        buffer for as long as the cache entry lives, and would alias the
+        caller's result with the cache (an in-place mutation of a returned
+        result must never rewrite what later hits serve)."""
+        import jax
+        return jax.tree.map(lambda x: np.asarray(x)[j:j + 1].copy(), tree)
+
+    @staticmethod
+    def stack_rows(rows):
+        """Rebatch nq==1 host rows (inverse of :meth:`row`)."""
+        import jax
+        if len(rows) == 1:
+            return rows[0]
+        return jax.tree.map(lambda *xs: np.concatenate(xs, 0), *rows)
+
+    @staticmethod
+    def pad_rows(tree, pad: int):
+        """Pad a host batch with ``pad`` copies of its last row, up to a
+        ladder bucket.  Serving pads BEFORE stage execution so every stage
+        (including eager pre-steps like query embedding) only ever sees
+        ladder-sized batches — the shapes warm-up compiled — instead of one
+        fresh compilation per distinct micro-batch size."""
+        import jax
+        if pad <= 0 or tree is None:
+            return tree
+        return jax.tree.map(
+            lambda x: np.concatenate(
+                [x, np.repeat(np.asarray(x)[-1:], pad, 0)], 0), tree)
+
+    @staticmethod
+    def restamp_qids(Q, R, qids):
+        """Overwrite the qid columns with the requesting rows' qids (cached
+        entries carry the original submitter's qid)."""
+        qid_arr = np.asarray(qids, np.int32)
+        return _restamp_qid(Q, qid_arr), _restamp_qid(R, qid_arr)
+
+    def info(self) -> dict:
+        out = self.lru.info()
+        out["hits"] = self.hits          # request-level, not per-depth
+        out["misses"] = self.misses
+        return out

@@ -1,0 +1,126 @@
+"""Continuous micro-batching scheduler over the engine's bucket ladder.
+
+The policy is the standard continuous-batching trade (cf. vLLM-style LM
+serving, here over retrieval pipelines):
+
+* **heavy load** — the queue reaches ``max_batch`` (the largest ladder
+  bucket by default) and the batch closes immediately, "full": steady
+  state packs every dispatch to the biggest compiled bucket.
+* **light load** — the oldest waiting request hits ``max_wait``: the batch
+  closes with whatever is queued, "deadline", so latency under light load
+  is bounded by ``max_wait`` + one batch's service time instead of waiting
+  for a batch that may never fill.
+
+Admission control is a bounded queue: ``submit`` raises
+:class:`~repro.serve.request.ServerOverloaded` rather than growing a
+backlog nobody will be served from before their deadline.
+
+The scheduler is clock-driven and thread-safe but owns no thread itself —
+``PipelineServer.step()`` (or its serving thread) pulls batches; tests
+drive it synchronously with ``drain=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+from repro.serve.request import ServeRequest, ServerOverloaded
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: list
+    reason: str          # "full" | "deadline" | "drain"
+    t_closed: float
+
+
+class MicroBatchScheduler:
+    def __init__(self, *, ladder, max_queue: int = 1024,
+                 max_wait_ms: float = 5.0, max_batch: int | None = None):
+        self.ladder = tuple(sorted(int(b) for b in ladder))
+        self.max_queue = int(max_queue)
+        self.max_wait_s = float(max_wait_ms) / 1000.0
+        self.max_batch = (self.ladder[-1] if max_batch is None
+                          else min(int(max_batch), self.ladder[-1]))
+        self._q: deque[ServeRequest] = deque()
+        self._cv = threading.Condition()
+        self.n_submitted = 0
+        self.n_rejected = 0
+
+    # -- producer side ------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.submit_many([req])
+
+    def submit_many(self, reqs) -> None:
+        """Admit a burst atomically: all requests enqueue, or none do and
+        :class:`ServerOverloaded` is raised.  Partial admission would leak
+        in-flight requests the caller holds no handles to (it got an
+        exception, not the request list)."""
+        with self._cv:
+            if len(self._q) + len(reqs) > self.max_queue:
+                self.n_rejected += len(reqs)
+                raise ServerOverloaded(
+                    f"request queue full ({len(self._q)}/{self.max_queue}, "
+                    f"burst of {len(reqs)}); shedding load")
+            now = time.monotonic()
+            for req in reqs:
+                req.t_enqueued = now
+                self._q.append(req)
+            self.n_submitted += len(reqs)
+            self._cv.notify()
+
+    def qsize(self) -> int:
+        with self._cv:
+            return len(self._q)
+
+    # -- consumer side ------------------------------------------------------
+    def select_bucket(self, n: int) -> int:
+        """Smallest ladder rung covering ``n`` (mirrors
+        ``ShardedQueryEngine.select_bucket``; kept here so a sequential
+        backend without an engine still reports buckets)."""
+        return next((b for b in self.ladder if b >= n), self.ladder[-1])
+
+    def _take(self, n: int, reason: str, now: float) -> Batch:
+        reqs = [self._q.popleft() for _ in range(n)]
+        return Batch(requests=reqs, reason=reason, t_closed=now)
+
+    def next_batch(self, *, block: bool = False, timeout: float | None = None,
+                   drain: bool = False) -> Batch | None:
+        """Return the next micro-batch, or None.
+
+        Non-blocking unless ``block``: then waits until a batch closes (or
+        ``timeout`` elapses).  ``drain=True`` closes a batch from whatever
+        is queued immediately — the synchronous replay/test mode.
+        """
+        t_give_up = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                now = time.monotonic()
+                wait = None
+                if self._q:
+                    if len(self._q) >= self.max_batch:
+                        return self._take(self.max_batch, "full", now)
+                    oldest = now - self._q[0].t_enqueued
+                    if drain:
+                        return self._take(len(self._q), "drain", now)
+                    if oldest >= self.max_wait_s:
+                        return self._take(len(self._q), "deadline", now)
+                    wait = self.max_wait_s - oldest
+                elif drain:
+                    return None
+                if not block:
+                    return None
+                if t_give_up is not None:
+                    remaining = t_give_up - now
+                    if remaining <= 0:
+                        return None
+                    wait = remaining if wait is None else min(wait, remaining)
+                self._cv.wait(wait)
+
+    def stats(self) -> dict:
+        return {"queued": self.qsize(), "submitted": self.n_submitted,
+                "rejected": self.n_rejected, "max_queue": self.max_queue,
+                "max_batch": self.max_batch,
+                "max_wait_ms": 1000.0 * self.max_wait_s}

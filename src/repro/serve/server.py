@@ -1,0 +1,354 @@
+"""PipelineServer: a compiled pipeline as a long-lived online service.
+
+The offline stack executes a *batch* of queries through a compiled
+pipeline; serving inverts the shape: queries arrive one at a time and the
+server re-creates the batch axis continuously —
+
+    submit() -> bounded queue -> micro-batch scheduler -> bucket ladder
+             -> stage-keyed result cache -> per-stage execution -> result
+
+* The pipeline is compiled ONCE (pass manager, fusion gate) at server
+  construction; serving executes the compiled IR chain, so steady-state
+  traffic never touches the compiler.
+* Micro-batches pack into the engine's existing bucket ladder and reuse
+  its persistent jit cache: after :meth:`warmup` every (stage, bucket)
+  variant is compiled and serving never recompiles.
+* A :class:`~repro.serve.cache.StageResultCache` keyed by the planner's
+  chained stage digests lets repeated queries skip whole pipeline
+  prefixes (the online mirror of the experiment-plan trie).
+* Admission control (bounded queue), per-request deadlines (expired
+  requests are dropped, not executed), and structured per-request traces
+  surfaced via :meth:`stats`.
+
+The server owns no thread until :meth:`start`; tests and replay drive it
+synchronously with :meth:`pump`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ir
+from repro.core.compiler import Context, _execute
+from repro.core.passes import compile_pipeline
+from repro.core.plan import chain_prefix_digests
+from repro.serve.cache import StageResultCache, query_digest
+from repro.serve.request import RequestTrace, ServeRequest
+from repro.serve.scheduler import MicroBatchScheduler
+from repro.serve.trace import TraceLog
+
+#: bucket ladder used when the backend has no sharded engine attached
+#: (REPRO_ENGINE=sequential): the sequential path pads per-chunk itself,
+#: so these rungs only shape the scheduler's batching decisions
+_FALLBACK_LADDER = (1, 2, 4, 8, 16)
+
+#: sentinel distinguishing "caller said nothing" (inherit the server
+#: default) from an explicit ``timeout_ms=None`` ("no deadline")
+_UNSET = object()
+
+
+class PipelineServer:
+    """Serve single queries (or small bursts) through a compiled pipeline.
+
+    >>> server = PipelineServer(Retrieve("BM25") % 10, backend)
+    >>> server.warmup(Q_sample)
+    >>> req = server.submit(q_row)      # non-blocking
+    >>> server.pump()                   # or server.start() for a thread
+    >>> R = req.wait(timeout=5.0)
+    """
+
+    def __init__(self, pipeline, backend, *, optimize: bool = True,
+                 max_queue: int = 1024, max_wait_ms: float = 5.0,
+                 max_batch: int | None = None,
+                 cache_entries: int | None = 4096,
+                 cache_stages: bool = True,
+                 default_timeout_ms: float | None = None,
+                 trace_stages: bool = False,
+                 trace_capacity: int = 2048,
+                 cache: StageResultCache | None = None):
+        self.backend = backend
+        self.engine = backend.engine
+        self.op = compile_pipeline(pipeline, backend, optimize=optimize)
+        self.chain = ir.chain(self.op)
+        self._stateful = self.op.stateful_subtree()
+        self._digest_scope = f"serve:be{backend.uid}:"
+        self._prefixes = chain_prefix_digests(self.chain,
+                                              scope=self._digest_scope)
+        ladder = (self.engine.ladder if self.engine is not None
+                  else _FALLBACK_LADDER)
+        self.scheduler = MicroBatchScheduler(
+            ladder=ladder, max_queue=max_queue, max_wait_ms=max_wait_ms,
+            max_batch=max_batch)
+        self.cache = cache if cache is not None \
+            else StageResultCache(cache_entries)
+        self.cache_stages = cache_stages
+        self.default_timeout_ms = default_timeout_ms
+        self.trace_stages = trace_stages
+        self.log = TraceLog(trace_capacity)
+        self._rid = 0
+        self._rid_lock = threading.Lock()
+        self._warm_compiles: int | None = None
+        self._thread: threading.Thread | None = None
+        self._stop = False
+        self.last_error: BaseException | None = None
+
+    # -- key management -----------------------------------------------------
+    def _prefix_digests(self) -> list[str]:
+        """Chained stage digests; recomputed per batch when the chain holds
+        a stateful stage (fit() bumps its version marker — the recompute is
+        what invalidates the online cache)."""
+        if self._stateful:
+            self._prefixes = chain_prefix_digests(self.chain,
+                                                  scope=self._digest_scope)
+        return self._prefixes
+
+    # -- submission ---------------------------------------------------------
+    def _next_rid(self) -> int:
+        with self._rid_lock:
+            self._rid += 1
+            return self._rid
+
+    def submit(self, Q, *, timeout_ms=_UNSET):
+        """Enqueue the queries in ``Q`` (an nq>=1 Q relation).  Returns one
+        :class:`ServeRequest` for nq==1, else a list.  Raises
+        :class:`~repro.serve.request.ServerOverloaded` when admission
+        control rejects (bounded queue full).  ``timeout_ms`` omitted =
+        inherit the server's ``default_timeout_ms``; an explicit ``None``
+        = this request has no deadline."""
+        nq = int(np.asarray(Q["qid"]).shape[0])
+        if nq <= 0:
+            raise ValueError("empty query batch")
+        if timeout_ms is _UNSET:
+            timeout_ms = self.default_timeout_ms
+        now = time.monotonic()
+        deadline = None if timeout_ms is None else now + timeout_ms / 1000.0
+        reqs = []
+        for j in range(nq):
+            row = StageResultCache.row(Q, j)
+            rid = self._next_rid()
+            req = ServeRequest(rid=rid, Q=row, deadline=deadline,
+                               trace=RequestTrace(rid=rid, t_arrival=now,
+                                                  chain_len=len(self.chain)))
+            req.qdigest = query_digest(row)
+            reqs.append(req)
+        # atomic: a burst admits whole or not at all (partial admission
+        # would execute requests the caller holds no handles to)
+        self.scheduler.submit_many(reqs)
+        return reqs[0] if nq == 1 else reqs
+
+    def submit_wait(self, Q, *, timeout: float = 60.0):
+        """Synchronous convenience: submit + pump + wait."""
+        req = self.submit(Q)
+        self.pump()
+        one = not isinstance(req, list)
+        return req.wait(timeout) if one else [r.wait(timeout) for r in req]
+
+    # -- serving loop -------------------------------------------------------
+    def step(self, *, block: bool = False, timeout: float | None = None,
+             drain: bool = False) -> int:
+        """Close and execute at most one micro-batch; returns the number of
+        requests it completed (0 = no batch closed)."""
+        batch = self.scheduler.next_batch(block=block, timeout=timeout,
+                                          drain=drain)
+        if batch is None:
+            return 0
+        self._execute_batch(batch)
+        return len(batch.requests)
+
+    def pump(self) -> int:
+        """Drain the queue synchronously (replay/test mode)."""
+        total = 0
+        while True:
+            n = self.step(drain=True)
+            if n == 0:
+                return total
+            total += n
+
+    def start(self) -> "PipelineServer":
+        """Spawn the serving thread (continuous mode)."""
+        if self._thread is None:
+            self._stop = False
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="pipeline-server")
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop = True
+            self._thread.join()
+            self._thread = None
+        self.pump()                      # never strand queued requests
+
+    def _loop(self) -> None:
+        while not self._stop:
+            try:
+                self.step(block=True, timeout=0.02)
+            except BaseException as e:             # keep the loop alive
+                self.last_error = e
+
+    # -- warm-up ------------------------------------------------------------
+    def warmup(self, Q_sample) -> dict:
+        """Compile every (stage, bucket) jit variant by replaying a sample
+        query at each ladder rung, then snapshot the engine's compile
+        counter: ``stats()['recompiles_since_warmup']`` must stay 0 in
+        steady state.  Cache writes are skipped (the tiled duplicates would
+        only pollute the LRU)."""
+        row = StageResultCache.row(Q_sample, 0)
+        t0 = time.monotonic()
+        for bucket in self.scheduler.ladder:
+            Qb = jax.tree.map(
+                lambda x: np.tile(x, (bucket,) + (1,) * (x.ndim - 1)), row)
+            ctx = Context(self.backend)
+            Q, R, tok = Qb, None, None
+            for stage in self.chain:
+                Q, R, tok = _execute(stage, ctx, Q, R, tok)
+            jax.block_until_ready((Q, R))
+        if self.engine is not None:
+            self._warm_compiles = self.engine.total_compiles()
+        return {"warmup_s": round(time.monotonic() - t0, 3),
+                "buckets": list(self.scheduler.ladder),
+                "compiles": (None if self.engine is None
+                             else self.engine.total_compiles())}
+
+    # -- batch execution ----------------------------------------------------
+    def _execute_batch(self, batch) -> None:
+        now = batch.t_closed
+        live = []
+        for req in batch.requests:
+            req.trace.t_scheduled = now
+            req.trace.queue_wait_ms = 1000.0 * (now - req.t_enqueued)
+            req.trace.batch_size = len(batch.requests)
+            req.trace.batch_reason = batch.reason
+            if req.expired(now):
+                self._finish(req, None, timed_out=True)
+            else:
+                live.append(req)
+        if not live:
+            return
+        self.log.record_batch(len(live))
+        prefixes = self._prefix_digests()
+        # deepest cached prefix per request, then group by resume depth so
+        # each group executes its remaining suffix as one micro-batch
+        groups: dict[int, list] = {}
+        cached: dict[int, tuple] = {}
+        for req in live:
+            depth, val = self.cache.lookup_deepest(prefixes, req.qdigest)
+            req.trace.cache_hit_depth = depth
+            cached[req.rid] = val
+            groups.setdefault(depth, []).append(req)
+        for depth in sorted(groups, reverse=True):
+            try:
+                self._run_group(groups[depth], depth,
+                                [cached[r.rid] for r in groups[depth]],
+                                prefixes)
+            except BaseException as e:
+                self.last_error = e
+                for req in groups[depth]:
+                    req.error = e
+                    self._finish(req, None)
+
+    def _run_group(self, reqs, depth: int, cached_vals, prefixes) -> None:
+        L = len(self.chain)
+        qids = [r.qid for r in reqs]
+        if depth >= L:                       # full-pipeline cache hits
+            for req, (Qc, Rc) in zip(reqs, cached_vals):
+                Qr, Rr = StageResultCache.restamp_qids(Qc, Rc, [req.qid])
+                # row(…, 0) copies: the served result must never alias the
+                # live cache entry (same invariant as the miss path)
+                self._finish(req, StageResultCache.row(
+                    Rr if Rr is not None else Qr, 0))
+            return
+        if depth == 0:
+            Q = StageResultCache.stack_rows([r.Q for r in reqs])
+            R = None
+        else:                                # resume mid-chain
+            Q = StageResultCache.stack_rows([v[0] for v in cached_vals])
+            R_rows = [v[1] for v in cached_vals]
+            R = (None if R_rows[0] is None
+                 else StageResultCache.stack_rows(R_rows))
+            Q, R = StageResultCache.restamp_qids(Q, R, qids)
+        n = len(reqs)
+        bucket = (self.engine.select_bucket(n) if self.engine is not None
+                  else self.scheduler.select_bucket(n))
+        for req in reqs:
+            req.trace.bucket = bucket
+        # pad up to the bucket BEFORE execution: every stage then sees
+        # exactly the ladder shapes warm-up compiled (no per-size variants
+        # anywhere, eager pre-steps included); padded rows are dropped when
+        # results are sliced per request below
+        Q = StageResultCache.pad_rows(Q, bucket - n)
+        R = StageResultCache.pad_rows(R, bucket - n)
+        ctx = Context(self.backend)
+        tok = ctx.source_token(Q, R)
+        stage_times = []
+        for i in range(depth, L):
+            stage = self.chain[i]
+            t0 = time.monotonic() if self.trace_stages else 0.0
+            Q, R, tok = _execute(stage, ctx, Q, R, tok)
+            if self.trace_stages:
+                jax.block_until_ready((Q, R))
+                ms = 1000.0 * (time.monotonic() - t0)
+                label = stage.label()
+                stage_times.append((label, round(ms, 3)))
+                self.log.record_stage(label, ms)
+            if self.cache_stages and self.cache.enabled and i < L - 1:
+                # one device->host conversion per stage, rows sliced from
+                # the host copy (per-row device slicing would compile a
+                # tiny XLA program per (arity, index) — a latency storm)
+                Qh = StageResultCache.to_host(Q)
+                Rh = None if R is None else StageResultCache.to_host(R)
+                for j, req in enumerate(reqs):
+                    self.cache.store(prefixes[i], req.qdigest,
+                                     StageResultCache.row(Qh, j),
+                                     None if Rh is None
+                                     else StageResultCache.row(Rh, j))
+        jax.block_until_ready((Q, R))
+        Qh = StageResultCache.to_host(Q)
+        Rh = None if R is None else StageResultCache.to_host(R)
+        result = Rh if Rh is not None else Qh
+        for j, req in enumerate(reqs):
+            req.trace.stage_ms = tuple(stage_times)
+            if self.cache.enabled:
+                self.cache.store(
+                    prefixes[L - 1], req.qdigest,
+                    StageResultCache.row(Qh, j),
+                    None if Rh is None else StageResultCache.row(Rh, j))
+            self._finish(req, StageResultCache.row(result, j))
+
+    def _finish(self, req, result, *, timed_out: bool = False) -> None:
+        t = time.monotonic()
+        tr = req.trace
+        tr.t_done = t
+        tr.timed_out = timed_out
+        tr.errored = req.error is not None
+        tr.latency_ms = 1000.0 * (t - tr.t_arrival)
+        tr.service_ms = 1000.0 * (t - tr.t_scheduled) if tr.t_scheduled else 0.0
+        tr.late = (not timed_out and not tr.errored
+                   and req.deadline is not None and t > req.deadline)
+        req.result = result
+        self.log.record(tr)
+        req.done.set()
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> dict:
+        out = {
+            "pipeline": self.op.label(),
+            "chain_len": len(self.chain),
+            "scheduler": self.scheduler.stats(),
+            **self.log.summary(),
+            "stage_cache": self.cache.info(),
+        }
+        if self.engine is not None:
+            out["engine"] = self.engine.stats()
+            total = self.engine.total_compiles()
+            out["recompiles_since_warmup"] = (
+                None if self._warm_compiles is None
+                else total - self._warm_compiles)
+        else:
+            out["engine"] = None
+            out["recompiles_since_warmup"] = None
+        return out

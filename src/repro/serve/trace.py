@@ -1,0 +1,115 @@
+"""Trace aggregation for the serving layer: latency percentiles, batch and
+cache-depth histograms, per-stage running means.
+
+The server keeps a bounded ring of recent :class:`RequestTrace` records
+(percentiles are computed over the ring) plus running counters that never
+reset — so ``stats()`` is O(ring) and a week-old server doesn't hold a
+week of traces.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of a sequence; 0.0 when
+    empty.  Deliberately simple/deterministic — bench JSON comparisons
+    diff across hosts, so no interpolation scheme to disagree over.
+    (True ceil, not round(x + .5): banker's rounding returns one rank too
+    high on exact-integer ties, e.g. the median of two values.)"""
+    xs = sorted(values)
+    if not xs:
+        return 0.0
+    rank = max(0, min(len(xs) - 1, math.ceil(q / 100.0 * len(xs)) - 1))
+    return float(xs[rank])
+
+
+def latency_summary(latencies_ms) -> dict:
+    xs = list(latencies_ms)
+    return {
+        "n": len(xs),
+        "mean_ms": round(sum(xs) / len(xs), 3) if xs else 0.0,
+        "p50_ms": round(percentile(xs, 50), 3),
+        "p95_ms": round(percentile(xs, 95), 3),
+        "p99_ms": round(percentile(xs, 99), 3),
+        "max_ms": round(max(xs), 3) if xs else 0.0,
+    }
+
+
+class TraceLog:
+    """Bounded trace ring + unbounded scalar aggregates.
+
+    Locked throughout: the serving thread records while monitoring threads
+    call ``summary()`` — an unguarded deque/dict would raise
+    "mutated during iteration" under continuous traffic."""
+
+    def __init__(self, capacity: int = 2048):
+        import threading
+        self._lock = threading.Lock()
+        self.ring: deque = deque(maxlen=capacity)
+        self.n_served = 0
+        self.n_timed_out = 0
+        self.n_errors = 0
+        self.n_late = 0
+        self.n_batches = 0
+        self.sum_batch_size = 0
+        self.max_batch_size = 0
+        #: cache hit depth -> count (0 = no prefix reused)
+        self.hit_depths: dict[int, int] = {}
+        #: stage label -> [sum_ms, count]
+        self.stage_ms: dict[str, list] = {}
+
+    # -- recording ----------------------------------------------------------
+    def record_batch(self, size: int) -> None:
+        with self._lock:
+            self.n_batches += 1
+            self.sum_batch_size += size
+            self.max_batch_size = max(self.max_batch_size, size)
+
+    def record_stage(self, label: str, ms: float) -> None:
+        with self._lock:
+            ent = self.stage_ms.setdefault(label, [0.0, 0])
+            ent[0] += ms
+            ent[1] += 1
+
+    def record(self, trace) -> None:
+        with self._lock:
+            self.ring.append(trace)
+            if trace.timed_out:
+                self.n_timed_out += 1
+                return
+            if trace.errored:
+                self.n_errors += 1
+                return
+            self.n_served += 1
+            if trace.late:
+                self.n_late += 1
+            d = trace.cache_hit_depth
+            self.hit_depths[d] = self.hit_depths.get(d, 0) + 1
+
+    # -- reporting ----------------------------------------------------------
+    def summary(self) -> dict:
+        with self._lock:
+            done = [t for t in self.ring
+                    if not (t.timed_out or t.errored)]
+            out = {
+                "served": self.n_served,
+                "timed_out": self.n_timed_out,
+                "errors": self.n_errors,
+                "late": self.n_late,
+                "batches": self.n_batches,
+                "mean_batch_size": (
+                    round(self.sum_batch_size / self.n_batches, 2)
+                    if self.n_batches else 0.0),
+                "max_batch_size": self.max_batch_size,
+                "cache_hit_depths": dict(sorted(self.hit_depths.items())),
+            }
+            if self.stage_ms:
+                out["stage_mean_ms"] = {
+                    label: round(s / n, 3)
+                    for label, (s, n) in self.stage_ms.items()}
+        out["latency_ms"] = latency_summary([t.latency_ms for t in done])
+        out["queue_wait_ms"] = latency_summary(
+            [t.queue_wait_ms for t in done])
+        return out

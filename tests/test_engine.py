@@ -11,10 +11,11 @@ except ModuleNotFoundError:      # property tests skip; fallbacks below run
     HAVE_HYPOTHESIS = False
 
 from repro.core import (DenseRerank, Experiment, Extract, ExperimentPlan,
-                        JaxBackend, Retrieve, RM3Expand, SDMRewrite,
-                        ShardedQueryEngine, default_bucket_ladder)
+                        FusedTopKRetrieve, JaxBackend, Retrieve, RM3Expand,
+                        SDMRewrite, ShardedQueryEngine, default_bucket_ladder)
 from repro.core.compiler import Context
 from repro.core.data import make_queries
+from repro.core.engine import StageProgram
 
 
 def _seq_backend(env):
@@ -188,6 +189,148 @@ def test_experiment_through_engine_measures_time(small_ir):
     for row in res["table"]:
         assert row["mrt_ms"] > 0
         assert row["compile_ms"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# bucket-ladder edge cases (parity with the sequential engine throughout)
+# ---------------------------------------------------------------------------
+
+def test_empty_query_batch_raises_on_both_paths(small_ir):
+    """Neither path can infer output shapes from zero queries; both must
+    fail loudly and identically instead of crashing deep in XLA."""
+    env = small_ir
+    Q0 = make_queries(np.zeros((0, 4), np.int32))
+    pipe = Retrieve("BM25", k=10)
+    with pytest.raises(ValueError, match="empty query batch"):
+        pipe.transform(Q0, backend=env["backend"], optimize=False)
+    with pytest.raises(ValueError, match="empty query batch"):
+        pipe.transform(Q0, backend=_seq_backend(env), optimize=False)
+
+
+def _fused_caps_backends(env):
+    """Engine + sequential backends with identical capabilities and no
+    dynamic pruning, so ``% K`` reaches the fused-topk lowering (gate
+    permitting) instead of the RQ1 pushdown on both sides."""
+    caps = frozenset({"fat", "multi_model", "fused_topk", "fused_scoring"})
+    be = JaxBackend(env["index"], default_k=60, query_chunk=4,
+                    dense=env["backend"].dense, capabilities=caps)
+    be_seq = JaxBackend(env["index"], default_k=60, query_chunk=4,
+                        dense=env["backend"].dense, capabilities=caps,
+                        sharded=False)
+    return be, be_seq
+
+
+def test_single_query_parity_through_fused_topk(small_ir):
+    env = small_ir
+    be, be_seq = _fused_caps_backends(env)
+    Q1 = _tiled_queries(env, 1)
+    pipe = Retrieve("BM25") % 10
+    Re = pipe.transform(Q1, backend=be, optimize=True)
+    Rs = pipe.transform(Q1, backend=be_seq, optimize=True)
+    assert np.asarray(Re["docids"]).shape[0] == 1
+    np.testing.assert_array_equal(np.asarray(Re["docids"]),
+                                  np.asarray(Rs["docids"]))
+    np.testing.assert_allclose(np.asarray(Re["scores"]),
+                               np.asarray(Rs["scores"]), rtol=1e-6)
+
+
+def test_batch_exactly_at_every_bucket_boundary(small_ir):
+    """nq == a ladder rung must take the exact-fit path (no tail trim) and
+    stay identical to the sequential engine."""
+    env = small_ir
+    be, be_seq = _fused_caps_backends(env)
+    eng = be.engine
+    pipe = Retrieve("BM25") % 10
+    for bucket in eng.ladder:
+        Q = _tiled_queries(env, bucket)
+        plan = eng.chunk_plan(bucket)
+        assert plan[-1][1] == plan[-1][2]        # tail fills its bucket
+        Re = pipe.transform(Q, backend=be, optimize=True)
+        Rs = pipe.transform(Q, backend=be_seq, optimize=True)
+        np.testing.assert_array_equal(np.asarray(Re["docids"]),
+                                      np.asarray(Rs["docids"]))
+
+
+def _tiny_env(n_docs=60):
+    from repro.index import build_index, synthesize_corpus, synthesize_topics
+    corpus = synthesize_corpus(n_docs=n_docs, vocab=500, mean_len=40, seed=3)
+    topics = synthesize_topics(corpus, n_topics=4, q_len=3, rels_per_topic=5,
+                               seed=4)
+    index = build_index(corpus)
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    return index, Q
+
+
+def test_k_exceeds_ndocs_through_fused_topk_path(small_ir):
+    """k > n_docs clamps to the corpus size on every path (top-k cannot
+    return more entries than documents exist) — fused kernel, optimised
+    cutoff chain, and the sequential engine all agree."""
+    index, Q = _tiny_env(n_docs=60)
+    k = 96                                        # > n_docs
+    be = JaxBackend(index, default_k=50, query_chunk=4)
+    be_seq = JaxBackend(index, default_k=50, query_chunk=4, dense=be.dense,
+                        sharded=False)
+    ref = Retrieve("BM25", k=k).transform(Q, backend=be_seq, optimize=False)
+    assert np.asarray(ref["docids"]).shape[1] == 60
+    fused = FusedTopKRetrieve("BM25", k=k).transform(Q, backend=be,
+                                                     optimize=False)
+    np.testing.assert_array_equal(np.asarray(fused["docids"]),
+                                  np.asarray(ref["docids"]))
+    np.testing.assert_allclose(np.asarray(fused["scores"]),
+                               np.asarray(ref["scores"]), rtol=1e-6)
+    # the optimised cutoff chain survives compilation + gating at k > n_docs
+    be_nopruning = JaxBackend(index, default_k=50, query_chunk=4,
+                              dense=be.dense,
+                              capabilities=frozenset(
+                                  {"fat", "multi_model", "fused_topk"}))
+    Ro = (Retrieve("BM25", k=k) % k).transform(Q, backend=be_nopruning,
+                                               optimize=True)
+    np.testing.assert_array_equal(np.asarray(Ro["docids"]),
+                                  np.asarray(ref["docids"]))
+
+
+# ---------------------------------------------------------------------------
+# serving API: bucket selection, single-chunk submission, bounded caches
+# ---------------------------------------------------------------------------
+
+def test_select_bucket_and_submit_chunk(small_ir):
+    env = small_ir
+    eng = ShardedQueryEngine(ladder=(4, 8))
+    assert [eng.select_bucket(n) for n in (1, 4, 5, 8)] == [4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        eng.select_bucket(0)
+    with pytest.raises(ValueError):
+        eng.select_bucket(9)                      # bigger than the ladder
+    Q = _tiled_queries(env, 5)
+    prog = StageProgram(key=("t", "sum"), fn=lambda t, w: w.sum())
+    out = eng.submit_chunk(prog, Q)               # one padded chunk @ 8
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(Q["weights"]).sum(1), rtol=1e-6)
+    assert eng.n_dispatches == 1
+    with pytest.raises(ValueError):
+        eng.submit_chunk(prog, _tiled_queries(env, 9))
+
+
+def test_engine_caches_are_lru_bounded_with_cache_info(small_ir):
+    env = small_ir
+    eng = ShardedQueryEngine(ladder=(2, 4), max_jit_entries=2,
+                             max_chunk_entries=2)
+    Q = _tiled_queries(env, 4)
+    for i in range(4):                            # 4 distinct stage keys
+        eng.map_queries(lambda t, w: w.sum() + i, Q, key=("stage", i))
+    info = eng.cache_info()
+    assert set(info) == {"jit", "chunk"}
+    assert info["jit"]["size"] <= 2
+    assert info["jit"]["evictions"] >= 2
+    assert info["chunk"]["size"] <= 2
+    for part in info.values():
+        assert {"size", "maxsize", "hits", "misses",
+                "evictions"} <= set(part)
+    # an evicted stage key recompiles on next use (bounded memory trumps
+    # the ladder bound under cache pressure)
+    eng.map_queries(lambda t, w: w.sum() + 0, Q, key=("stage", 0))
+    assert eng.cache_info()["jit"]["size"] <= 2
 
 
 def test_engine_chunk_cache_reused_across_stages(small_ir):

@@ -1,0 +1,264 @@
+"""Online serving subsystem: PipelineServer parity vs the offline paths,
+zero steady-state recompilation, stage-cache prefix reuse, admission
+control, deadlines, and the micro-batching scheduler's closure policy."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DenseRerank, ExperimentPlan, Extract, JaxBackend,
+                        Retrieve)
+from repro.core.compiler import Context
+from repro.core.data import make_queries
+from repro.serve import (MicroBatchScheduler, PipelineServer, RequestTimeout,
+                         RequestTrace, ServeRequest, ServerOverloaded,
+                         StageResultCache)
+
+
+def _row(Q, i):
+    return {k: np.asarray(v)[i:i + 1] for k, v in Q.items()}
+
+
+def _seq_backend(env):
+    return JaxBackend(env["index"], default_k=60, query_chunk=4,
+                      dense=env["backend"].dense, sharded=False)
+
+
+def _replay_rows(server, Q, order):
+    reqs = [server.submit(_row(Q, i)) for i in order]
+    server.pump()
+    return [r.wait(30) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# serving parity: replayed single queries == plan.execute / sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipe_fn,name", [
+    (lambda: Retrieve("BM25") % 10, "sparse_topk"),
+    (lambda: (Retrieve("BM25", k=30) >> DenseRerank(alpha=0.3)) % 10,
+     "dense_rerank"),
+])
+def test_server_matches_offline_paths(small_ir, pipe_fn, name):
+    env = small_ir
+    pipe = pipe_fn()
+    server = PipelineServer(pipe, env["backend"])
+    nq = int(np.asarray(env["Q"]["qid"]).shape[0])
+    results = _replay_rows(server, env["Q"], range(nq))
+    got_d = np.concatenate([np.asarray(r["docids"]) for r in results], 0)
+    got_s = np.concatenate([np.asarray(r["scores"]) for r in results], 0)
+    # vs the sequential engine (the seed execution path)
+    ref = pipe.transform(env["Q"], backend=_seq_backend(env), optimize=False)
+    np.testing.assert_array_equal(got_d, np.asarray(ref["docids"]))
+    np.testing.assert_allclose(got_s, np.asarray(ref["scores"]), rtol=1e-6)
+    # vs the experiment plan on the server's own (sharded) backend
+    plan = ExperimentPlan([pipe], env["backend"])
+    [rp] = plan.execute(env["Q"], ctx=Context(env["backend"]), record=None)
+    np.testing.assert_array_equal(got_d, np.asarray(rp["docids"]))
+    # qids must be the requester's, not a cache donor's
+    assert [int(np.asarray(r["qid"])[0]) for r in results] == list(range(nq))
+
+
+def test_server_burst_submit_and_out_of_order_replay(small_ir):
+    env = small_ir
+    pipe = Retrieve("BM25", k=20) >> Extract("QL")
+    server = PipelineServer(pipe, env["backend"])
+    order = [3, 0, 7, 1, 1, 6]
+    results = _replay_rows(server, env["Q"], order)
+    ref = pipe.transform(env["Q"], backend=_seq_backend(env), optimize=False)
+    for i, r in zip(order, results):
+        np.testing.assert_array_equal(np.asarray(r["docids"])[0],
+                                      np.asarray(ref["docids"])[i])
+        np.testing.assert_allclose(np.asarray(r["features"])[0],
+                                   np.asarray(ref["features"])[i], rtol=1e-6)
+    # burst: one submit call with several rows returns a request list
+    reqs = server.submit({k: np.asarray(v)[:3] for k, v in env["Q"].items()})
+    assert isinstance(reqs, list) and len(reqs) == 3
+    server.pump()
+    for i, rq in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(rq.wait(30)["docids"])[0],
+                                      np.asarray(ref["docids"])[i])
+
+
+# ---------------------------------------------------------------------------
+# steady state never recompiles
+# ---------------------------------------------------------------------------
+
+def test_no_recompiles_after_warmup_across_100_requests(small_ir):
+    env = small_ir
+    be = JaxBackend(env["index"], default_k=60, query_chunk=4,
+                    dense=env["backend"].dense)
+    server = PipelineServer(Retrieve("BM25") % 10, be,
+                            cache_entries=0)        # force real execution
+    server.warmup(env["Q"])
+    for rep in range(13):                           # 13 * 8 = 104 requests
+        server.submit(env["Q"])
+        server.pump()
+    s = server.stats()
+    assert s["served"] >= 100
+    assert s["recompiles_since_warmup"] == 0
+    assert s["engine"]["max_compiles_per_stage"] <= len(be.engine.ladder)
+
+
+# ---------------------------------------------------------------------------
+# stage-keyed result cache
+# ---------------------------------------------------------------------------
+
+def test_repeated_query_full_cache_hit(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"])
+    r1 = server.submit(_row(env["Q"], 0))
+    server.pump()
+    first = r1.wait(30)
+    r2 = server.submit(_row(env["Q"], 0))
+    server.pump()
+    second = r2.wait(30)
+    assert r2.trace.cache_hit_depth == r2.trace.chain_len
+    np.testing.assert_array_equal(np.asarray(first["docids"]),
+                                  np.asarray(second["docids"]))
+    assert server.stats()["stage_cache"]["hits"] >= 1
+
+
+def test_shared_cache_resumes_prefix_across_servers(small_ir):
+    """Two pipelines sharing a retrieval prefix: the second server resumes
+    mid-chain from entries the first one wrote — the online mirror of the
+    plan trie's shared-prefix execution."""
+    env = small_ir
+    shared = StageResultCache(1024)
+    s1 = PipelineServer(Retrieve("BM25", k=20) >> Extract("QL"),
+                        env["backend"], cache=shared, optimize=False)
+    assert len(s1.chain) == 2
+    _replay_rows(s1, env["Q"], range(4))
+    s2 = PipelineServer(Retrieve("BM25", k=20) >> Extract("TF_IDF"),
+                        env["backend"], cache=shared, optimize=False)
+    req = s2.submit(_row(env["Q"], 2))
+    server_new = s2.submit(_row(env["Q"], 6))       # never seen by s1
+    s2.pump()
+    out = req.wait(30)
+    out_new = server_new.wait(30)
+    assert req.trace.cache_hit_depth == 1           # resumed after Retrieve
+    assert server_new.trace.cache_hit_depth == 0
+    ref = (Retrieve("BM25", k=20) >> Extract("TF_IDF")).transform(
+        env["Q"], backend=_seq_backend(env), optimize=False)
+    for i, r in ((2, out), (6, out_new)):
+        np.testing.assert_array_equal(np.asarray(r["docids"])[0],
+                                      np.asarray(ref["docids"])[i])
+        np.testing.assert_allclose(np.asarray(r["features"])[0],
+                                   np.asarray(ref["features"])[i], rtol=1e-6)
+        assert int(np.asarray(r["qid"])[0]) == i    # re-stamped, not donor's
+    # the full second pipeline is now cached end-to-end
+    again = s2.submit(_row(env["Q"], 2))
+    s2.pump()
+    again.wait(30)
+    assert again.trace.cache_hit_depth == 2
+
+
+def test_stage_cache_lru_bound(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                            cache_entries=3)
+    _replay_rows(server, env["Q"], range(8))
+    info = server.stats()["stage_cache"]
+    assert info["size"] <= 3
+    assert info["evictions"] >= 5
+
+
+# ---------------------------------------------------------------------------
+# admission control + deadlines
+# ---------------------------------------------------------------------------
+
+def test_admission_control_rejects_when_queue_full(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                            max_queue=2)
+    server.submit(_row(env["Q"], 0))
+    with pytest.raises(ServerOverloaded):
+        # burst admission is all-or-nothing: 2 rows into 1 free slot must
+        # admit neither (partial admission would execute requests the
+        # caller holds no handles to)
+        server.submit({k: np.asarray(v)[1:3] for k, v in env["Q"].items()})
+    server.submit(_row(env["Q"], 1))
+    with pytest.raises(ServerOverloaded):
+        server.submit(_row(env["Q"], 2))
+    assert server.stats()["scheduler"]["rejected"] == 3
+    server.pump()                                   # queued ones still serve
+    assert server.stats()["served"] == 2
+
+
+def test_expired_request_dropped_not_executed(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                            default_timeout_ms=10)
+    req = server.submit(_row(env["Q"], 0))
+    time.sleep(0.05)
+    server.pump()
+    with pytest.raises(RequestTimeout):
+        req.wait(5)
+    assert req.trace.timed_out
+    assert server.stats()["timed_out"] == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy (no server, no jax)
+# ---------------------------------------------------------------------------
+
+def _mk_req(rid):
+    return ServeRequest(rid=rid, Q=None, deadline=None,
+                        trace=RequestTrace(rid=rid))
+
+
+def test_scheduler_fills_batches_under_heavy_load():
+    sch = MicroBatchScheduler(ladder=(4, 8), max_wait_ms=1000.0)
+    for i in range(19):
+        sch.submit(_mk_req(i))
+    sizes = []
+    while True:
+        b = sch.next_batch(drain=True)
+        if b is None:
+            break
+        sizes.append((len(b.requests), b.reason))
+    # two full max-bucket batches close immediately; the tail drains
+    assert sizes == [(8, "full"), (8, "full"), (3, "drain")]
+
+
+def test_scheduler_bounds_wait_under_light_load():
+    sch = MicroBatchScheduler(ladder=(4, 8), max_wait_ms=10.0)
+    assert sch.next_batch() is None
+    sch.submit(_mk_req(0))
+    assert sch.next_batch() is None                 # younger than max_wait
+    t0 = time.monotonic()
+    b = sch.next_batch(block=True, timeout=2.0)
+    waited = time.monotonic() - t0
+    assert b is not None and b.reason == "deadline" and len(b.requests) == 1
+    assert waited < 1.0                             # ~max_wait, not timeout
+
+
+def test_scheduler_bucket_selection_matches_ladder():
+    sch = MicroBatchScheduler(ladder=(4, 8, 16))
+    assert [sch.select_bucket(n) for n in (1, 4, 5, 9, 16)] == [4, 4, 8, 16, 16]
+
+
+# ---------------------------------------------------------------------------
+# threaded continuous mode
+# ---------------------------------------------------------------------------
+
+def test_threaded_server_smoke(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                            max_wait_ms=2.0).start()
+    try:
+        reqs = []
+        for i in range(24):
+            reqs.append(server.submit(_row(env["Q"], i % 8)))
+            time.sleep(0.001)
+        outs = [r.wait(60) for r in reqs]
+    finally:
+        server.stop()
+    assert server.last_error is None
+    assert server.stats()["served"] == 24
+    ref = (Retrieve("BM25") % 10).transform(env["Q"],
+                                            backend=_seq_backend(env),
+                                            optimize=False)
+    for i, out in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(out["docids"])[0],
+                                      np.asarray(ref["docids"])[i % 8])
