@@ -25,9 +25,10 @@ from pathlib import Path
 import numpy as np
 import jax
 
-from repro.core import (DenseRerank, DenseRetrieve, Experiment,
-                        ExperimentPlan, Extract, FatRetrieve, PrunedRetrieve,
-                        Retrieve, ShardedQueryEngine, optimize_pipeline)
+from repro.core import (BackendDescriptor, DenseRerank, DenseRetrieve,
+                        Experiment, ExperimentPlan, Extract, FatRetrieve,
+                        PrunedRetrieve, Retrieve, ShardedQueryEngine,
+                        optimize_pipeline)
 from repro.core.compiler import Context, JaxBackend, run_pipeline
 from repro.core.data import make_queries
 from repro.launch.mesh import make_query_mesh
@@ -81,13 +82,22 @@ def gate_calibration(decisions, mrt_fused_ms: float,
     d = usable[-1]                  # the decision that shaped this pipeline
     predicted = d["fused_proxy_s"] / d["unfused_proxy_s"]
     measured = mrt_fused_ms / mrt_unfused_ms
-    return {
+    out = {
         "pattern": d["pattern"],
         "accepted": d["accepted"],
         "predicted_ratio": round(predicted, 4),
         "measured_ratio": round(measured, 4),
         "measured_over_predicted": round(measured / predicted, 4),
     }
+    # per-candidate HLO counts + wall-clock: the exact record shape
+    # ``analysis.hlo_cost.fit_peaks`` consumes to calibrate the roofline
+    # (decisions carry the counts since the descriptor refactor)
+    for side, mrt in (("unfused", mrt_unfused_ms), ("fused", mrt_fused_ms)):
+        if d.get(f"{side}_flops") and d.get(f"{side}_bytes"):
+            out[side] = {"flops": d[f"{side}_flops"],
+                         "bytes": d[f"{side}_bytes"],
+                         "measured_s": mrt / 1000.0}
+    return out
 
 
 def topk_overlap(A, B, k: int) -> float:
@@ -116,8 +126,10 @@ def _time_pipeline(pipe, Q, backend, *, optimize, repeats=3):
 def bench_rq1(env, k: int = 10, repeats: int = 3) -> list[dict]:
     """Rank-cutoff optimisation across T/TD/TDN formulations."""
     index = env["index"]
-    be_nopruning = JaxBackend(index, default_k=1000, query_chunk=8,
-                              capabilities=frozenset({"fat", "multi_model"}))
+    be_nopruning = JaxBackend(
+        index, default_k=1000, query_chunk=8,
+        descriptor=BackendDescriptor.default(frozenset({"fat",
+                                                        "multi_model"})))
     be_full = JaxBackend(index, default_k=1000, query_chunk=8,
                          dense=be_nopruning.dense)
     rows = []
@@ -226,10 +238,13 @@ def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
 
     index = env["index"]
     base = frozenset({"fat", "multi_model"})
-    be_fused = JaxBackend(index, default_k=1000, query_chunk=8,
-                          capabilities=base | {"fused_topk", "fused_scoring"})
+    be_fused = JaxBackend(
+        index, default_k=1000, query_chunk=8,
+        descriptor=BackendDescriptor.default(
+            base | {"fused_topk", "fused_scoring"}))
     be_unfused = JaxBackend(index, default_k=1000, query_chunk=8,
-                            dense=be_fused.dense, capabilities=base)
+                            dense=be_fused.dense,
+                            descriptor=BackendDescriptor.default(base))
     topics = env["formulations"]["T"]
     Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
                      np.asarray(topics.qids))
@@ -272,6 +287,122 @@ def bench_fusion(env, k: int = 10, repeats: int = 3) -> dict:
     return out
 
 
+#: the seed's fused-gather regression: the fused path ran at 0.41x the
+#: unfused speed, yet the static roofline proxy would have accepted it —
+#: the motivating case for measured gating
+SEED_FUSED_GATHER_SPEEDUP = 0.41
+
+
+def _probe_calibration(d: dict) -> dict | None:
+    """fit_peaks-shaped calibration record from one *probe-measured* gate
+    decision (per-candidate HLO counts + probe wall-clock)."""
+    if not (d.get("fused_measured_s") and d.get("unfused_measured_s")
+            and d.get("fused_proxy_s") and d.get("unfused_proxy_s")
+            and d.get("fused_flops") and d.get("unfused_flops")):
+        return None
+    predicted = d["fused_proxy_s"] / d["unfused_proxy_s"]
+    measured = d["fused_measured_s"] / d["unfused_measured_s"]
+    return {
+        "pattern": d["pattern"], "accepted": d["accepted"],
+        "predicted_ratio": round(predicted, 4),
+        "measured_ratio": round(measured, 4),
+        "measured_over_predicted": round(measured / predicted, 4),
+        "unfused": {"flops": d["unfused_flops"], "bytes": d["unfused_bytes"],
+                    "measured_s": d["unfused_measured_s"]},
+        "fused": {"flops": d["fused_flops"], "bytes": d["fused_bytes"],
+                  "measured_s": d["fused_measured_s"]},
+    }
+
+
+def bench_autotune(env, k: int = 10) -> dict:
+    """Measurement-driven compiler (ISSUE 6): cold autotune — probe-measure
+    both candidate lowerings per gate decision and persist the winners to an
+    on-disk TuningProfile — vs warm profile-reuse compilation, which must
+    replay every decision with ZERO gate-candidate compiles and ZERO probe
+    measurements.  Also fits per-host roofline peaks from the probe
+    calibration records, and reports whether measured gating would have
+    rejected the seed's 0.41x fused-gather case (the static proxy accepted
+    it)."""
+    from repro.analysis.hlo_cost import fit_peaks
+    from repro.core import BackendDescriptor, TuningProfile, compile_pipeline
+
+    index = env["index"]
+    caps = frozenset({"fat", "multi_model", "fused_topk", "fused_scoring"})
+    CACHE.mkdir(parents=True, exist_ok=True)
+    prof_path = CACHE / "tuning_profile.json"
+    prof_path.unlink(missing_ok=True)          # a genuinely cold tune
+
+    def mk_backend():
+        desc = (BackendDescriptor.default(caps)
+                .with_profile(TuningProfile(prof_path))
+                .with_autotune(True, band=10.0))
+        return JaxBackend(index, default_k=1000, query_chunk=8,
+                          descriptor=desc)
+
+    workloads = {
+        "retrieve_topk": Retrieve("BM25") % k,
+        "fat_scorer_topk": (Retrieve("BM25")
+                            >> (Extract("QL") ** Extract("TF_IDF"))) % k,
+        "mixed_k_linear": 0.5 * Retrieve("BM25", k=200)
+                          + 0.5 * Retrieve("QL", k=1000),
+    }
+    out = {"k": k, "workloads": {}, "host": host_info(),
+           "profile_path": str(prof_path)}
+    phases = {}
+    for phase in ("cold", "warm"):
+        be = mk_backend()                      # fresh estimate cache + a
+        totals = {"elapsed_s": 0.0}            # profile freshly re-read
+        for name, pipe in workloads.items():
+            report = {}
+            t0 = time.perf_counter()
+            compile_pipeline(pipe, be, report=report)
+            elapsed = time.perf_counter() - t0
+            totals["elapsed_s"] += elapsed
+            w = out["workloads"].setdefault(name, {})
+            w[f"{phase}_compile_s"] = round(elapsed, 4)
+            w[f"{phase}_tuning"] = report["tuning"]
+            if phase == "cold":
+                w["decisions"] = [
+                    {"pattern": d["pattern"], "accepted": d["accepted"],
+                     "source": d["source"],
+                     "predicted_ratio": (
+                         None if not (d["fused_proxy_s"]
+                                      and d["unfused_proxy_s"])
+                         else round(d["fused_proxy_s"]
+                                    / d["unfused_proxy_s"], 4)),
+                     "measured_ratio": (
+                         None if not (d.get("fused_measured_s")
+                                      and d.get("unfused_measured_s"))
+                         else round(d["fused_measured_s"]
+                                    / d["unfused_measured_s"], 4))}
+                    for d in report["fusion_decisions"]]
+                w["calibration"] = next(
+                    (c for c in map(_probe_calibration,
+                                    report["fusion_decisions"]) if c), None)
+            for key, v in report["tuning"].items():
+                totals[key] = totals.get(key, 0) + v
+        phases[phase] = totals
+    out["cold_tune_s"] = round(phases["cold"]["elapsed_s"], 4)
+    out["warm_compile_s"] = round(phases["warm"]["elapsed_s"], 4)
+    out["warm_speedup"] = round(phases["cold"]["elapsed_s"]
+                                / max(phases["warm"]["elapsed_s"], 1e-9), 1)
+    out["warm_profile_reuse"] = {
+        k_: phases["warm"][k_]
+        for k_ in ("gate_estimates", "probe_measurements",
+                   "profile_hits", "profile_misses")}
+    cal_records = [w["calibration"] for w in out["workloads"].values()
+                   if w.get("calibration")]
+    out["calibration_fit"] = fit_peaks(cal_records)
+    out["seed_fused_gather_case"] = {
+        "seed_speedup": SEED_FUSED_GATHER_SPEEDUP,
+        "measured_ratio": round(1.0 / SEED_FUSED_GATHER_SPEEDUP, 4),
+        # the measured gate accepts only fused_measured < unfused_measured,
+        # i.e. measured_ratio < 1 — a 2.4x-slower fused path cannot pass
+        "autotune_would_reject": (1.0 / SEED_FUSED_GATHER_SPEEDUP) >= 1.0,
+    }
+    return out
+
+
 def bench_dense(env, k: int = 10, k_in: int = 200, nprobe: int = 8,
                 repeats: int = 3) -> dict:
     """Dense second stage (the ROADMAP's top open item): fused vs unfused
@@ -282,10 +413,13 @@ def bench_dense(env, k: int = 10, k_in: int = 200, nprobe: int = 8,
 
     index = env["index"]
     base = frozenset({"fat", "multi_model"})
-    be_fused = JaxBackend(index, default_k=1000, query_chunk=8,
-                          capabilities=base | {"fused_dense", "dense_topk"})
+    be_fused = JaxBackend(
+        index, default_k=1000, query_chunk=8,
+        descriptor=BackendDescriptor.default(
+            base | {"fused_dense", "dense_topk"}))
     be_unfused = JaxBackend(index, default_k=1000, query_chunk=8,
-                            dense=be_fused.dense, capabilities=base)
+                            dense=be_fused.dense,
+                            descriptor=BackendDescriptor.default(base))
     topics = env["formulations"]["T"]
     Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
                      np.asarray(topics.qids))

@@ -129,6 +129,31 @@ def main() -> None:
                 "name": f"fusion_{name}_unfused",
                 "us_per_call": w["unfused_mrt_ms"] * 1000, "derived": ""})
 
+        # --- autotune: measured gating + persisted tuning profiles -------
+        at = ir_bench.bench_autotune(env)
+        (OUT / "autotune.json").write_text(json.dumps(at, indent=1))
+        print("\n== Autotune: measured gating + persisted tuning profile ==")
+        print(f"cold tune {at['cold_tune_s']}s vs warm profile-reuse "
+              f"compile {at['warm_compile_s']}s ({at['warm_speedup']}x); "
+              f"warm reuse counters: {at['warm_profile_reuse']}")
+        print(f"calibration fit: {at['calibration_fit']}")
+        print(f"seed 0.41x fused-gather case: {at['seed_fused_gather_case']}")
+        for name, w in at["workloads"].items():
+            print(f"[{name}] {w['decisions']}")
+        n_dec = sum(len(w["decisions"]) for w in at["workloads"].values())
+        csv_rows.append({
+            "name": "autotune_cold_tune",
+            "us_per_call": round(at["cold_tune_s"] * 1e6, 1),
+            "derived": f"decisions={n_dec}"})
+        csv_rows.append({
+            "name": "autotune_warm_compile",
+            "us_per_call": round(at["warm_compile_s"] * 1e6, 1),
+            "derived": (
+                f"speedup={at['warm_speedup']}x,"
+                f"probes={at['warm_profile_reuse']['probe_measurements']},"
+                f"gate_compiles={at['warm_profile_reuse']['gate_estimates']},"
+                f"hits={at['warm_profile_reuse']['profile_hits']}")})
+
         # --- dense second stage: fused rerank + IVF candidate gen --------
         dn = ir_bench.bench_dense(env, repeats=args.repeats)
         (OUT / "dense.json").write_text(json.dumps(dn, indent=1))

@@ -13,7 +13,8 @@ from __future__ import annotations
 import json
 import sys
 
-REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense", "serve")
+REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense", "serve",
+            "autotune")
 
 #: every serve workload must report at least this many offered-load levels
 #: (acceptance: p50/p95/p99 at >= 3 levels, batched vs naive)
@@ -73,6 +74,31 @@ def main() -> int:
     if not serve.get("gated"):
         print("FAIL: serve section has no gated trajectory metrics",
               file=sys.stderr)
+        return 1
+    at = summary["autotune"]
+    for field in ("cold_tune_s", "warm_compile_s", "warm_profile_reuse"):
+        if not at.get(field):
+            print(f"FAIL: autotune section lacks {field!r}", file=sys.stderr)
+            return 1
+    reuse = at["warm_profile_reuse"]
+    if reuse.get("probe_measurements", 1) != 0 or \
+            reuse.get("gate_estimates", 1) != 0:
+        print("FAIL: warm profile-reuse compile performed probe "
+              f"measurements / gate compiles: {reuse}", file=sys.stderr)
+        return 1
+    if not at["warm_compile_s"] < at["cold_tune_s"]:
+        print(f"FAIL: warm profile-reuse compile ({at['warm_compile_s']}s) "
+              f"not faster than cold tune ({at['cold_tune_s']}s)",
+              file=sys.stderr)
+        return 1
+    at_wl = at.get("workloads", {})
+    bad = [n for n, w in at_wl.items()
+           if not any(d.get("predicted_ratio") is not None
+                      and d.get("measured_ratio") is not None
+                      for d in w.get("decisions", []))]
+    if not at_wl or bad:
+        print("FAIL: autotune workloads lack per-decision measured/"
+              f"predicted ratios: {bad or 'no workloads'}", file=sys.stderr)
         return 1
     print(f"bench summary OK: sections {list(REQUIRED)} all present; "
           f"fusion workloads: {sorted(fus)}; "

@@ -74,8 +74,28 @@ def collect_metrics(summary: dict, label: str) -> dict[str, tuple[float, str]]:
 
 
 def missing_sections(prev: dict, cur: dict) -> list[str]:
-    return [s for s in ("fusion", "dense", "serve")
+    return [s for s in ("fusion", "dense", "serve", "autotune")
             if cur.get(s) and not prev.get(s)]
+
+
+def calibration_errors(summary: dict) -> list[float]:
+    """Per-workload cost-gate calibration errors, as a >=1 'times-off'
+    factor (``max(r, 1/r)`` of ``measured_over_predicted``), across every
+    section that emits calibration blocks."""
+    out: list[float] = []
+    for section in ("fusion", "dense", "autotune"):
+        wls = (summary.get(section) or {}).get("workloads") or {}
+        for w in wls.values():
+            cal = w.get("calibration") if isinstance(w, dict) else None
+            r = (cal or {}).get("measured_over_predicted")
+            if isinstance(r, (int, float)) and r > 0:
+                out.append(max(float(r), 1.0 / float(r)))
+    return out
+
+
+def _median(xs: list[float]) -> float:
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
 
 
 def resolve_summary(path: Path) -> Path | None:
@@ -150,6 +170,23 @@ def main() -> int:
             failures.append((name, p, c, delta))
         print(f"  {name}: prev={p:.1f} cur={c:.1f} ({delta:+.1f}%, "
               f"{better} is better) {status}")
+    # calibration drift: warn-only — a cost-gate whose predictions drift
+    # away from measurement wants re-fitting (hlo_cost.fit_peaks), but a
+    # noisy CI host must never fail the build over it
+    cur_err, prev_err = calibration_errors(cur), calibration_errors(prev)
+    if cur_err and prev_err:
+        cm, pm = _median(cur_err), _median(prev_err)
+        print(f"  calibration: median gate error prev={pm:.2f}x "
+              f"cur={cm:.2f}x ({len(prev_err)} -> {len(cur_err)} records)")
+        if cm > 2.0 * pm:
+            print(f"WARNING: median cost-gate calibration error drifted "
+                  f">2x vs {prev_path} ({pm:.2f}x -> {cm:.2f}x); re-fit the "
+                  "roofline peaks from the bench artifacts "
+                  "(analysis.hlo_cost.fit_peaks / "
+                  "BackendDescriptor.calibrated)")
+    elif cur_err:
+        print(f"  calibration: {len(cur_err)} records in current summary; "
+              "previous artifact has none (drift not compared)")
     ivf_p = ((prev.get("dense") or {}).get("ivf") or {}).get("ivf_qps")
     ivf_c = ((cur.get("dense") or {}).get("ivf") or {}).get("ivf_qps")
     if ivf_p and ivf_c:

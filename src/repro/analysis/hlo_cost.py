@@ -19,7 +19,9 @@ Post-SPMD shapes are per-shard, so every figure is PER CHIP.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
+import os
 import re
 from typing import Any
 
@@ -326,27 +328,125 @@ def analyze(hlo_text: str) -> dict[str, Any]:
 # callable estimation — the pipeline compiler's cost gate (core/passes.py)
 # ---------------------------------------------------------------------------
 
-#: nominal per-chip peaks for the roofline time proxy.  Only *ratios* of
-#: proxies ever gate a decision, so absolute calibration is irrelevant —
-#: these just weight flops against HBM traffic plausibly (TPU-class chip).
+#: nominal per-chip peaks for the roofline time proxy — the *uncalibrated*
+#: defaults (TPU-class chip).  A ratio gate only needs the flops:bytes
+#: weighting to be plausible; a calibrated BackendDescriptor replaces both
+#: constants with per-host fits from measured bench ratios (``fit_peaks``).
 PEAK_FLOPS_PER_S = 1.0e14
 PEAK_BYTES_PER_S = 1.0e12
 
 
-def estimate_callable(fn, *args) -> dict[str, Any]:
+def host_fingerprint() -> str:
+    """Short identity digest of this host for scoping calibration data and
+    cached estimates (peak constants are host properties, not code
+    properties)."""
+    import platform
+    raw = f"{platform.node()}:{platform.machine()}:{os.cpu_count()}"
+    return hashlib.sha256(raw.encode()).hexdigest()[:16]
+
+
+def estimate_callable(fn, *args, peaks: tuple[float, float] | None = None
+                      ) -> dict[str, Any]:
     """Lower ``fn(*args)`` (args may be ``jax.ShapeDtypeStruct`` pytrees) to
     post-optimisation HLO and run the trip-count-aware cost model over it.
 
     Adds ``time_proxy_s`` — flops/peak + bytes/peak, an additive roofline
     proxy: comparing two candidates' proxies orders them by modelled cost
-    even when one resource dominates.  Used by the fusion pass's cost gate;
+    even when one resource dominates.  ``peaks`` overrides the nominal
+    ``(PEAK_FLOPS_PER_S, PEAK_BYTES_PER_S)`` — calibrated descriptors pass
+    their fitted per-host constants.  Used by the fusion pass's cost gate;
     callers should cache per content key (compilation is the expensive part).
     """
     import jax
+    pf, pb = peaks if peaks is not None else (PEAK_FLOPS_PER_S,
+                                              PEAK_BYTES_PER_S)
     text = jax.jit(fn).lower(*args).compile().as_text()
     out = analyze(text)
-    out["time_proxy_s"] = (out["flops_per_chip"] / PEAK_FLOPS_PER_S
-                           + out["bytes_per_chip"] / PEAK_BYTES_PER_S)
+    out["time_proxy_s"] = (out["flops_per_chip"] / pf
+                           + out["bytes_per_chip"] / pb)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# peak calibration from measured gate records (bench artifacts)
+# ---------------------------------------------------------------------------
+
+def _ratio(rec: dict, gamma: float) -> float | None:
+    """Predicted fused/unfused time ratio at flops:bytes weight ``gamma``
+    (gamma = peak_flops / peak_bytes — the byte premium in flop units)."""
+    try:
+        fu = rec["unfused"]["flops"] + gamma * rec["unfused"]["bytes"]
+        ff = rec["fused"]["flops"] + gamma * rec["fused"]["bytes"]
+    except (KeyError, TypeError):
+        return None
+    if fu <= 0 or ff <= 0:
+        return None
+    return ff / fu
+
+
+def fit_peaks(records: list[dict]) -> dict | None:
+    """Fit per-host roofline peaks from measured gate-calibration records.
+
+    Each record carries, per candidate (``unfused`` / ``fused``), the HLO
+    counts and a measured wall-clock: ``{"flops", "bytes", "measured_s"}``.
+    The proxy is ``t = (F + gamma*B) / Pf`` with ``gamma = Pf/Pb``, so the
+    *ratio* of two candidates depends only on gamma: step 1 grid-searches
+    gamma to minimise the squared log-ratio error against the measured
+    ratios; step 2 anchors the absolute scale by the median of
+    ``(F + gamma*B) / measured_s`` over every candidate.  Returns None when
+    no record is usable (the caller keeps the nominal constants)."""
+    import math
+
+    usable = []
+    for rec in records or ():
+        ok = True
+        for side in ("unfused", "fused"):
+            c = rec.get(side) or {}
+            if not all(isinstance(c.get(f), (int, float)) and c.get(f) > 0
+                       for f in ("flops", "bytes", "measured_s")):
+                ok = False
+        if ok:
+            usable.append(rec)
+    if not usable:
+        return None
+
+    def log_err(gamma: float) -> float:
+        total = 0.0
+        for rec in usable:
+            pred = _ratio(rec, gamma)
+            meas = rec["fused"]["measured_s"] / rec["unfused"]["measured_s"]
+            total += (math.log(pred) - math.log(meas)) ** 2
+        return total
+
+    # gamma grid: 1 (pure-flops pricing) .. 1e4 (extreme byte premium);
+    # the nominal constants sit at gamma = 100
+    grid = [10 ** (e / 8.0) for e in range(0, 33)]
+    gamma = min(grid, key=log_err)
+    scales = []
+    for rec in usable:
+        for side in ("unfused", "fused"):
+            c = rec[side]
+            scales.append((c["flops"] + gamma * c["bytes"]) / c["measured_s"])
+    scales.sort()
+    pf = scales[len(scales) // 2]          # median: robust to one bad probe
+    err = math.sqrt(log_err(gamma) / len(usable))
+    return {"peak_flops_per_s": pf, "peak_bytes_per_s": pf / gamma,
+            "gamma": gamma, "n_records": len(usable),
+            "rms_log_ratio_error": err}
+
+
+def calibration_records(summary: dict) -> list[dict]:
+    """Extract usable calibration records from a bench ``summary.json``
+    (the ``calibration`` blocks the fusion/dense/autotune sections emit per
+    workload).  Tolerant of older artifacts that lack the per-candidate
+    counts — those records are simply skipped by ``fit_peaks``."""
+    out = []
+    for section in ("fusion", "dense", "autotune"):
+        sec = summary.get(section) or {}
+        for w in (sec.get("workloads") or {}).values():
+            cal = w.get("calibration")
+            if cal:
+                out.append(cal)
     return out
 
 

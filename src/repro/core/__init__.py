@@ -7,6 +7,8 @@
 """
 from repro.core.compiler import Context, JaxBackend, run_pipeline  # noqa: F401
 from repro.core.data import make_queries  # noqa: F401
+from repro.core.descriptor import (BackendDescriptor,  # noqa: F401
+                                   TuningProfile)
 from repro.core.engine import (ShardedQueryEngine,  # noqa: F401
                                default_bucket_ladder)
 from repro.core.experiment import Experiment, format_table  # noqa: F401

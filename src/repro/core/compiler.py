@@ -22,12 +22,14 @@ import dataclasses
 import hashlib
 import itertools
 import os
+import warnings
 import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.descriptor import DEFAULT_CAPABILITIES, BackendDescriptor
 from repro.core.engine import ShardedQueryEngine, StageProgram
 from repro.core.ir import Op, lower
 from repro.core.transformer import Transformer
@@ -51,15 +53,16 @@ class JaxBackend:
     #: cutoff on Anserini; fat postings on Terrier — our backend supports
     #: all, plus the Pallas kernel lowerings the fusion pass cost-gates:
     #: fused_topk/fused_scoring for the sparse stage, dense_topk/fused_dense
-    #: for the dense second stage)
-    CAPABILITIES = frozenset({"pruned_topk", "fat", "multi_model",
-                              "fused_topk", "fused_scoring", "dense_topk",
-                              "fused_dense"})
+    #: for the dense second stage).  The full optimisation surface now lives
+    #: on ``self.descriptor`` (a BackendDescriptor); this alias and the
+    #: ``capabilities=`` constructor arg survive as compatibility shims.
+    CAPABILITIES = DEFAULT_CAPABILITIES
 
     def __init__(self, index: InvertedIndex, dense: DenseIndex | None = None,
                  *, default_k: int = 1000, query_chunk: int = 16,
                  stop_df_fraction: float = 0.1,
                  capabilities: frozenset | None = None, seed: int = 0,
+                 descriptor: BackendDescriptor | None = None,
                  sharded: bool | None = None,
                  engine: ShardedQueryEngine | None = None,
                  bucket_ladder=None, ivf=None, ivf_lists: int | None = None,
@@ -68,8 +71,18 @@ class JaxBackend:
         self.uid = next(_BACKEND_UID)
         self.default_k = min(default_k, index.n_docs)
         self.query_chunk = query_chunk
-        self.capabilities = (self.CAPABILITIES if capabilities is None
-                             else frozenset(capabilities))
+        if capabilities is not None:
+            if descriptor is not None:
+                raise TypeError(
+                    "pass either descriptor= or the deprecated "
+                    "capabilities=, not both")
+            warnings.warn(
+                "JaxBackend(capabilities=...) is deprecated; pass "
+                "descriptor=BackendDescriptor.default(capabilities) "
+                "instead", DeprecationWarning, stacklevel=2)
+            descriptor = BackendDescriptor.default(frozenset(capabilities))
+        self.descriptor = (descriptor if descriptor is not None
+                           else BackendDescriptor.default())
         # stopwords are removed at index time (build_index), so the global
         # max posting-list length is the safe static gather width
         lens = np.diff(np.asarray(index.term_start))
@@ -98,6 +111,12 @@ class JaxBackend:
         self.engine = (engine if engine is not None
                        else ShardedQueryEngine(ladder=bucket_ladder)
                        if sharded else None)
+
+    @property
+    def capabilities(self) -> frozenset:
+        """Deprecated alias for ``self.descriptor.capabilities`` (the flat
+        frozenset the passes used to string-probe)."""
+        return self.descriptor.capabilities
 
     @property
     def ivf(self):

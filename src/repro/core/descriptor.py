@@ -1,0 +1,257 @@
+"""Backend capability descriptors + persisted tuning profiles.
+
+The rewrite/fusion passes used to string-probe a flat ``frozenset`` on the
+backend (``"fused_topk" in be.capabilities``) at match time.  This module
+replaces that convention with a :class:`BackendDescriptor` — a frozen
+config object carrying everything the compiler needs to know about a
+backend *as data*:
+
+* capability flags            (which rewrites/lowerings are legal),
+* kernel limits               (the native-k ceilings of the Pallas kernels,
+                               so "will this K hit the kernel fast path" is
+                               a descriptor lookup, not an import),
+* per-host peak constants     (the roofline peaks the HLO cost gate prices
+                               with — calibratable from measured bench
+                               ratios via ``analysis.hlo_cost.fit_peaks``),
+* a tuning-profile handle     (persisted gate decisions keyed by
+                               ``(backend digest, op key, bucket)``), and
+* autotune policy             (opt-in probe measurement of gate candidates
+                               whose estimated margin is within a band).
+
+Passes receive the descriptor at build time (``default_passes(desc)``);
+``JaxBackend`` exposes one as ``backend.descriptor`` and keeps
+``capabilities=`` as a deprecation shim.
+
+:class:`TuningProfile` is the persistence layer: an on-disk JSON store of
+fusion-gate decisions, hardened the same way ``plan.ArtifactCache`` is —
+pid-suffixed tmp file + atomic replace on write, corrupt/truncated files
+degrade to an empty profile instead of taking the compile down.  A profile
+hit replays the stored decision with ZERO gate-candidate compiles and ZERO
+probe measurements, which is what lets repeated Experiments and server
+restarts skip the expensive half of compilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from pathlib import Path
+
+#: the full capability set of the JAX backend (paper §4 engines support
+#: subsets; ``JaxBackend.CAPABILITIES`` aliases this for compatibility)
+DEFAULT_CAPABILITIES = frozenset({
+    "pruned_topk", "fat", "multi_model", "fused_topk", "fused_scoring",
+    "dense_topk", "fused_dense",
+})
+
+
+# ---------------------------------------------------------------------------
+# tuning profile — persisted fusion-gate decisions
+# ---------------------------------------------------------------------------
+
+class TuningProfile:
+    """On-disk store of fusion-gate decisions keyed by
+    ``(backend digest, op key, bucket)``.
+
+    The key is fully content-derived: the backend digest covers the index
+    arrays + execution config (``plan.backend_digest``), the op key names
+    the candidate pair the gate compared, and the bucket is the query-term
+    width the candidates were priced/probed at.  A profile written on one
+    backend therefore can never serve decisions to a different index — the
+    digest misses and the gate re-derives.
+
+    ``path=None`` keeps the profile in memory (tests, throwaway tuning).
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: str | Path | None = None):
+        self.path = None if path is None else Path(path)
+        self.entries: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self.dirty = False
+        self._load()
+
+    # -- persistence --------------------------------------------------------
+    def _load(self) -> None:
+        if self.path is None or not self.path.exists():
+            return
+        try:
+            doc = json.loads(self.path.read_text())
+            if doc.get("version") != self.VERSION:
+                raise ValueError(f"profile version {doc.get('version')!r}")
+            entries = doc["entries"]
+            if not isinstance(entries, dict):
+                raise TypeError("entries must be a mapping")
+            self.entries = entries
+        except Exception:
+            # corrupt / truncated / foreign / old-version file: a tuning
+            # store must degrade to re-tuning, never take the compile down
+            self.path.unlink(missing_ok=True)
+            self.entries = {}
+
+    def save(self) -> None:
+        """Atomic publish (pid-suffixed tmp + replace — the ArtifactCache
+        hardening pattern; concurrent writers race benignly)."""
+        if self.path is None or not self.dirty:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        doc = {"version": self.VERSION, "entries": self.entries}
+        tmp = self.path.with_name(f"{self.path.name}.{os.getpid()}.tmp")
+        tmp.write_text(json.dumps(doc, indent=1))
+        tmp.replace(self.path)
+        self.dirty = False
+
+    # -- keying -------------------------------------------------------------
+    @staticmethod
+    def key(backend_digest: str, op_key, bucket: int) -> str:
+        return hashlib.sha256(
+            f"{backend_digest}:{op_key!r}:{bucket}".encode()).hexdigest()
+
+    # -- access -------------------------------------------------------------
+    def lookup(self, backend_digest: str, op_key, bucket: int) -> dict | None:
+        ent = self.entries.get(self.key(backend_digest, op_key, bucket))
+        if ent is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return ent["decision"]
+
+    def record(self, backend_digest: str, op_key, bucket: int,
+               decision: dict) -> None:
+        k = self.key(backend_digest, op_key, bucket)
+        ent = {"decision": _jsonable(decision), "bucket": bucket,
+               "op": repr(op_key)}
+        if self.entries.get(k) != ent:
+            self.entries[k] = ent
+            self.dirty = True
+
+    def info(self) -> dict:
+        return {"path": None if self.path is None else str(self.path),
+                "entries": len(self.entries), "hits": self.hits,
+                "misses": self.misses, "dirty": self.dirty}
+
+
+def _jsonable(d: dict) -> dict:
+    """Round-trip a decision dict through JSON semantics now, so what the
+    profile serves on a hit is bit-identical to what a reloaded file would
+    serve (tuples become lists either way)."""
+    return json.loads(json.dumps(d))
+
+
+# ---------------------------------------------------------------------------
+# backend descriptor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendDescriptor:
+    """Frozen description of a backend's optimisation surface.
+
+    ``kernel_limits`` maps gate pattern -> max kernel-native k (None =
+    no k ceiling for that pattern).  ``peak_flops_per_s`` /
+    ``peak_bytes_per_s`` parameterise the HLO roofline proxy; ``host``
+    fingerprints where they were calibrated (it scopes the backend's
+    estimate cache, so a descriptor deserialised on another host can never
+    serve that host's stale estimates).  ``profile`` / ``autotune*`` are
+    the measurement-driven layer: see the module docstring.
+    """
+
+    capabilities: frozenset = DEFAULT_CAPABILITIES
+    kernel_limits: tuple = ()
+    peak_flops_per_s: float = 1.0e14
+    peak_bytes_per_s: float = 1.0e12
+    host: str = ""
+    profile: TuningProfile | None = dataclasses.field(
+        default=None, compare=False, repr=False)
+    autotune: bool = False
+    #: probe-measure both candidates when |fused - unfused| / unfused of the
+    #: estimated proxies is within this band (the regime where the static
+    #: roofline is least trustworthy)
+    autotune_band: float = 0.25
+    probe_queries: int = 4
+    probe_repeats: int = 2
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def default(cls, capabilities: frozenset | None = None,
+                **overrides) -> "BackendDescriptor":
+        """Descriptor for the in-process JAX backend: full (or given)
+        capability set, kernel limits read off the kernel packages, nominal
+        roofline peaks from ``analysis.hlo_cost``, this host's
+        fingerprint."""
+        from repro.analysis.hlo_cost import (PEAK_BYTES_PER_S,
+                                             PEAK_FLOPS_PER_S,
+                                             host_fingerprint)
+        from repro.kernels.dense_scoring.ops import MAX_KERNEL_K as DENSE_K
+        from repro.kernels.topk.ops import MAX_KERNEL_K as TOPK_K
+        kw = dict(
+            capabilities=(DEFAULT_CAPABILITIES if capabilities is None
+                          else frozenset(capabilities)),
+            kernel_limits=(("topk", TOPK_K), ("fat", None),
+                           ("dense_topk", DENSE_K), ("dense_rerank", DENSE_K)),
+            peak_flops_per_s=PEAK_FLOPS_PER_S,
+            peak_bytes_per_s=PEAK_BYTES_PER_S,
+            host=host_fingerprint(),
+        )
+        kw.update(overrides)
+        return cls(**kw)
+
+    def with_profile(self, profile: TuningProfile | None) -> "BackendDescriptor":
+        return dataclasses.replace(self, profile=profile)
+
+    def with_autotune(self, enabled: bool = True, *,
+                      band: float | None = None,
+                      probe_queries: int | None = None,
+                      probe_repeats: int | None = None) -> "BackendDescriptor":
+        kw: dict = {"autotune": enabled}
+        if band is not None:
+            kw["autotune_band"] = band
+        if probe_queries is not None:
+            kw["probe_queries"] = probe_queries
+        if probe_repeats is not None:
+            kw["probe_repeats"] = probe_repeats
+        return dataclasses.replace(self, **kw)
+
+    def calibrated(self, fit: dict) -> "BackendDescriptor":
+        """Descriptor with peaks replaced by a ``hlo_cost.fit_peaks``
+        result (accepts any mapping with the two peak keys)."""
+        return dataclasses.replace(
+            self, peak_flops_per_s=float(fit["peak_flops_per_s"]),
+            peak_bytes_per_s=float(fit["peak_bytes_per_s"]))
+
+    # -- queries ------------------------------------------------------------
+    def supports(self, capability: str) -> bool:
+        return capability in self.capabilities
+
+    def native_limit(self, pattern: str) -> int | None:
+        for name, lim in self.kernel_limits:
+            if name == pattern:
+                return lim
+        return None
+
+    def kernel_native(self, pattern: str, k: int) -> bool:
+        lim = self.native_limit(pattern)
+        return lim is None or k <= lim
+
+    @property
+    def peak_digest(self) -> str:
+        """Digest of (host, peak constants) — the estimate-cache scope: two
+        descriptors pricing with different peaks (or calibrated on
+        different hosts) must never share cached proxy estimates."""
+        return hashlib.sha256(
+            f"{self.host}:{self.peak_flops_per_s:.8e}:"
+            f"{self.peak_bytes_per_s:.8e}".encode()).hexdigest()[:16]
+
+
+def as_descriptor(backend) -> BackendDescriptor:
+    """The descriptor of ``backend``: its own if it exposes one, else one
+    adapted from a legacy flat ``capabilities`` frozenset (duck-typed
+    backends in tests), else the full default."""
+    desc = getattr(backend, "descriptor", None)
+    if isinstance(desc, BackendDescriptor):
+        return desc
+    caps = getattr(backend, "capabilities", None)
+    return BackendDescriptor.default(
+        None if caps is None else frozenset(caps))

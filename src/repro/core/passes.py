@@ -44,12 +44,14 @@ import time
 from typing import Callable
 
 from repro.core import stages as S
+from repro.core.descriptor import BackendDescriptor, as_descriptor
 from repro.core.ir import (COMBINATOR_KINDS, Op, Schema, SchemaError, chain,
                            leaf, lower, pretty)
 from repro.core.transformer import Transformer
 
-#: query-term width used for cost-gate lowering (only cost *ratios* gate
-#: decisions, and they are monotone in the query width)
+#: query-term width used for cost-gate lowering AND probe measurement (only
+#: cost *ratios* gate decisions, and they are monotone in the query width);
+#: doubles as the tuning profile's bucket key
 GATE_MAXQ = 8
 
 
@@ -167,18 +169,29 @@ def expr_schema(op: Op, backend=None) -> Schema:
 # ---------------------------------------------------------------------------
 
 class PassContext:
-    """Shared state for one compile: backend, rewrite trace, fusion-gate
-    decisions, optional cross-pipeline CSE table, per-pass IR snapshots."""
+    """Shared state for one compile: backend + its descriptor, rewrite
+    trace, fusion-gate decisions and tuning counters, optional
+    cross-pipeline CSE table, per-pass IR snapshots."""
 
     def __init__(self, backend, *, trace: list | None = None,
-                 cse_table: dict | None = None, keep_snapshots: bool = False):
+                 cse_table: dict | None = None, keep_snapshots: bool = False,
+                 descriptor: BackendDescriptor | None = None):
         self.backend = backend
+        self.descriptor = descriptor if descriptor is not None \
+            else as_descriptor(backend)
         self.trace = trace if trace is not None else []
         self.cse_table = cse_table if cse_table is not None else {}
         self.decisions: list[dict] = []
         self.snapshots: list[tuple[str, Op]] = []
         self.keep_snapshots = keep_snapshots
         self.timings: list[tuple[str, float]] = []
+        #: the acceptance counters for the warm-reuse property: a compile
+        #: served entirely from a persisted TuningProfile must show zero
+        #: gate_estimates (candidate compiles) and zero probe_measurements
+        self.counters: dict[str, int] = {
+            "gate_estimates": 0, "probe_measurements": 0,
+            "profile_hits": 0, "profile_misses": 0,
+        }
 
 
 class Pass:
@@ -274,12 +287,15 @@ class SchemaPass(Pass):
 # ---------------------------------------------------------------------------
 
 IRRule = Callable[[Op, PassContext], "Op | None"]
-IR_RULES: list[tuple[str, IRRule]] = []
+#: (name, rule, required capability or None) — capability-gated rules are
+#: filtered once at pass construction against the backend descriptor, not
+#: string-probed per match (the descriptor refactor)
+IR_RULES: list[tuple[str, IRRule, str | None]] = []
 
 
-def ir_rule(name: str):
+def ir_rule(name: str, requires: str | None = None):
     def deco(fn):
-        IR_RULES.append((name, fn))
+        IR_RULES.append((name, fn, requires))
         return fn
     return deco
 
@@ -327,11 +343,9 @@ def cutoff_scale_swap(op, pctx):
     return None
 
 
-@ir_rule("cutoff_pushdown")
+@ir_rule("cutoff_pushdown", requires="pruned_topk")
 def cutoff_pushdown(op, pctx):
     """Retrieve % K -> PrunedRetrieve(K): the RQ1 dynamic-pruning rewrite."""
-    if "pruned_topk" not in pctx.backend.capabilities:
-        return None
     if op.kind == "cutoff" and op.inputs[0].kind == "retrieve":
         ret = op.inputs[0]
         K = op.params["k"]
@@ -349,11 +363,11 @@ def _as_extract_models(inputs) -> tuple[str, ...] | None:
     return tuple(models)
 
 
-@ir_rule("fat_fusion")
+@ir_rule("fat_fusion", requires="fat")
 def fat_fusion(op, pctx):
     """Retrieve >> (Extract ** ... ** Extract) -> FatRetrieve: RQ2 (a single
     Extract is the degenerate one-feature case)."""
-    if "fat" not in pctx.backend.capabilities or op.kind != "then":
+    if op.kind != "then":
         return None
     kids = list(op.inputs)
     for i in range(len(kids) - 1):
@@ -375,11 +389,13 @@ def fat_fusion(op, pctx):
     return None
 
 
-@ir_rule("linear_fusion")
+@ir_rule("linear_fusion", requires="multi_model")
 def linear_fusion(op, pctx):
     """Σ wᵢ·Retrieve(mᵢ, k) on one index -> MultiRetrieve (one postings
-    pass instead of N — beyond-paper rewrite enabled by score_all)."""
-    if "multi_model" not in pctx.backend.capabilities or op.kind != "linear":
+    pass instead of N — beyond-paper rewrite enabled by score_all).  The
+    uniform-k guard is the equivalence boundary; mixed-k fusion is handled
+    by the AutotunePass, which only takes it when *measured* faster."""
+    if op.kind != "linear":
         return None
     ks = set()
     models = []
@@ -415,28 +431,44 @@ def scale_fold(op, pctx):
 
 class RewritePass(Pass):
     """Bottom-up application of the equivalence rules to a fixpoint — the
-    IR re-expression of the old ``rewrite.optimize_pipeline`` loop."""
+    IR re-expression of the old ``rewrite.optimize_pipeline`` loop.
+
+    Capability-gated rules are filtered ONCE against the backend descriptor
+    at pass construction; the match loop never probes the backend."""
     name = "rewrite"
 
-    def __init__(self, max_iters: int = 20):
+    def __init__(self, descriptor: BackendDescriptor | None = None,
+                 max_iters: int = 20):
         self.max_iters = max_iters
+        self.descriptor = descriptor
+        self._rules: list[tuple[str, IRRule]] | None = (
+            None if descriptor is None else _eligible_rules(descriptor))
 
     def run(self, op: Op, pctx: PassContext) -> Op:
+        # a pass built without a descriptor (legacy direct construction)
+        # resolves its rule set from the context's descriptor per run
+        rules = self._rules if self._rules is not None \
+            else _eligible_rules(pctx.descriptor)
         for _ in range(self.max_iters):
-            new = self._walk(op, pctx)
+            new = self._walk(op, pctx, rules)
             if new.key() == op.key():
                 return new
             op = new
         return op
 
-    def _walk(self, op: Op, pctx: PassContext) -> Op:
-        op = _rebuild(op, [self._walk(i, pctx) for i in op.inputs])
-        for name, rule in IR_RULES:
+    def _walk(self, op: Op, pctx: PassContext, rules) -> Op:
+        op = _rebuild(op, [self._walk(i, pctx, rules) for i in op.inputs])
+        for name, rule in rules:
             out = rule(op, pctx)
             if out is not None and out.key() != op.key():
                 pctx.trace.append((name, op, out))
-                return self._walk(out, pctx)
+                return self._walk(out, pctx, rules)
         return op
+
+
+def _eligible_rules(desc: BackendDescriptor) -> list[tuple[str, IRRule]]:
+    return [(name, rule) for name, rule, req in IR_RULES
+            if req is None or desc.supports(req)]
 
 
 # ---------------------------------------------------------------------------
@@ -499,21 +531,80 @@ def _abstract_dense_rerank_args(backend):
     return idx, emb, t, w, _abstract_qvec(backend)
 
 
-def _estimate(backend, key, build, args):
+def _estimate(backend, desc: BackendDescriptor, key, build, args,
+              counters: dict | None = None):
     """Cost estimate for one candidate per-query program, cached on the
     backend by content key (compilation dominates; estimates are pure
-    functions of backend + static params)."""
-    cache = backend.__dict__.setdefault("_cost_estimates", {})
+    functions of backend + static params + the descriptor's peaks).
+
+    The cache is scoped by the descriptor's host/peak digest: an estimate
+    priced under one set of peak constants (or computed on another host and
+    carried over in a deserialised profile) must never answer for a
+    differently calibrated descriptor."""
+    scope = backend.__dict__.setdefault("_cost_estimates", {})
+    cache = scope.setdefault(desc.peak_digest, {})
     if key in cache:
         return cache[key]
     from repro.analysis.hlo_cost import estimate_callable
+    if counters is not None:
+        counters["gate_estimates"] += 1
     try:
         fn = build()
-        est = estimate_callable(fn, *args)
+        est = estimate_callable(
+            fn, *args, peaks=(desc.peak_flops_per_s, desc.peak_bytes_per_s))
     except Exception:          # lowering unavailable: never fuse blind
         est = None
     cache[key] = est
     return est
+
+
+def _backend_gate_digest(backend) -> str:
+    """Content digest keying this backend's tuning-profile entries (lazy
+    import: plan imports this module at load time)."""
+    from repro.core.plan import backend_digest
+    try:
+        return backend_digest(backend)
+    except Exception:
+        # duck-typed test backends without index arrays: scope by uid so
+        # entries at least never cross live backends
+        return f"uid:{getattr(backend, 'uid', id(backend))}"
+
+
+def _probe_queries(backend, n: int):
+    """Concrete synthetic (terms, weights) probe batch [n, GATE_MAXQ] —
+    deterministic, so probe timings are comparable across candidates."""
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(0)
+    vocab = backend.index.vocab
+    terms = rng.integers(0, vocab, (n, GATE_MAXQ)).astype(np.int32)
+    weights = np.ones((n, GATE_MAXQ), np.float32)
+    return jnp.asarray(terms), jnp.asarray(weights)
+
+
+def _probe_qvecs(backend, n: int):
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(0)
+    qv = rng.standard_normal((n, backend.dense.dim)).astype(np.float32)
+    qv /= np.maximum(np.linalg.norm(qv, axis=-1, keepdims=True), 1e-6)
+    return jnp.asarray(qv)
+
+
+def _measure_callable(fn, static_args, batched_args, repeats: int) -> float:
+    """Wall-clock one candidate on a concrete probe batch: jit(vmap(fn)),
+    one warm-up call (compile excluded), then min-of-repeats seconds."""
+    import jax
+    in_axes = (None,) * len(static_args) + (0,) * len(batched_args)
+    vf = jax.jit(jax.vmap(fn, in_axes=in_axes))
+    args = (*static_args, *batched_args)
+    jax.block_until_ready(vf(*args))
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(vf(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 class FusionPass(Pass):
@@ -523,16 +614,34 @@ class FusionPass(Pass):
     paths, gated by the HLO cost model: the fused candidate must price
     *strictly* cheaper than the unfused chain it replaces, else the unfused
     interpreter path is kept.  Every decision (either way) is recorded in
-    ``PassContext.decisions``."""
+    ``PassContext.decisions`` and, when the descriptor carries a
+    :class:`~repro.core.descriptor.TuningProfile`, persisted so the next
+    compile against the same backend replays it with zero candidate
+    compiles.  Enablement and kernel-native limits come from the backend
+    descriptor, received at pass construction."""
     name = "fusion"
 
+    def __init__(self, descriptor: BackendDescriptor | None = None):
+        self.descriptor = descriptor
+
+    def _desc(self, pctx: PassContext) -> BackendDescriptor:
+        return self.descriptor if self.descriptor is not None \
+            else pctx.descriptor
+
     def run(self, op: Op, pctx: PassContext) -> Op:
-        return self._walk(op, pctx)
+        out = self._walk(op, pctx)
+        prof = self._desc(pctx).profile
+        if prof is not None:
+            prof.save()           # no-op unless dirty (or in-memory)
+        return out
 
     def _walk(self, op: Op, pctx: PassContext) -> Op:
         op = _rebuild(op, [self._walk(i, pctx) for i in op.inputs])
+        desc = self._desc(pctx)
         if op.kind == "then":
             return self._fuse_dense_rerank_pairs(op, pctx)
+        if op.kind == "linear":
+            return self._tune_mixed_linear(op, pctx)
         if op.kind != "cutoff" or not op.inputs[0].is_leaf:
             return op
         inner = op.inputs[0]
@@ -548,13 +657,13 @@ class FusionPass(Pass):
         k_in = min(k_in, be.index.n_docs)
         from repro.index import retrieve as RT
         mp = be.max_postings
-        if inner.kind == "dense_retrieve" and "dense_topk" in be.capabilities:
+        if inner.kind == "dense_retrieve" and desc.supports("dense_topk"):
             return self._fuse_dense_retrieve(op, inner, K, k_in, pctx)
-        if inner.kind == "retrieve" and "fused_topk" in be.capabilities:
-            from repro.kernels.topk.ops import kernel_native
+        if inner.kind == "retrieve" and desc.supports("fused_topk"):
             model = inner.params["model"]
             fused = leaf(S.FusedTopKRetrieve(model=model, k=K))
-            if self._gate(pctx, "topk", kernel_native=kernel_native(K),
+            if self._gate(pctx, "topk",
+                          kernel_native=desc.kernel_native("topk", K),
                           args=_abstract_args(be),
                           unfused=("topk_unfused", model, k_in, mp),
                           fused=("topk_fused", model, K, mp),
@@ -565,18 +674,20 @@ class FusionPass(Pass):
                           build_fused=lambda: (
                               lambda ix, t, w: RT.retrieve_topk_fused(
                                   ix, t, w, model=model, k=K,
-                                  max_postings=mp))):
+                                  max_postings=mp)),
+                          probe=lambda n: ((be.index,),
+                                           _probe_queries(be, n))):
                 pctx.trace.append(("fuse_topk", op, fused))
                 return fused
-        elif inner.kind == "fat_retrieve" and \
-                "fused_scoring" in be.capabilities:
+        elif inner.kind == "fat_retrieve" and desc.supports("fused_scoring"):
             from repro.kernels.fused_scoring.ops import models_supported
             model = inner.params["model"]
             feats = tuple(inner.params["features"])
             if not models_supported((model,) + feats):
                 return op
             fused = leaf(S.FusedFatRetrieve(model=model, features=feats, k=K))
-            if self._gate(pctx, "fat", kernel_native=True,
+            if self._gate(pctx, "fat",
+                          kernel_native=desc.kernel_native("fat", K),
                           args=_abstract_args(be),
                           unfused=("fat_unfused", model, feats, k_in, mp),
                           fused=("fat_fused", model, feats, K, mp),
@@ -589,17 +700,27 @@ class FusionPass(Pass):
                               lambda ix, t, w: RT.retrieve_fat_fused(
                                   ix, t, w, rank_model=model,
                                   feature_models=feats, k=K,
-                                  max_postings=mp))):
+                                  max_postings=mp)),
+                          probe=lambda n: ((be.index,),
+                                           _probe_queries(be, n))):
                 pctx.trace.append(("fuse_fat", op, fused))
                 return fused
+        return op
+
+    # -- mixed-k linear fusion: measured-only (AutotunePass) ----------------
+    def _tune_mixed_linear(self, op: Op, pctx: PassContext) -> Op:
+        """Hook for the AutotunePass's mixed-k ``linear()`` fusion.  The
+        static pass never takes it (uniform-k is the equivalence-rule
+        boundary; mixed-k changes the per-model truncation depths, so it is
+        only acceptable when *measured* faster)."""
         return op
 
     # -- dense candidate generation: cutoff(dense_retrieve) -----------------
     def _fuse_dense_retrieve(self, op: Op, inner: Op, K: int, k_in: int,
                              pctx: PassContext) -> Op:
         from repro.index import dense as DN
-        from repro.kernels.dense_scoring.ops import kernel_native
         be = pctx.backend
+        desc = self._desc(pctx)
         nprobe = inner.params["nprobe"]
         fused = leaf(S.FusedDenseRetrieve(k=K, nprobe=nprobe))
         qv = _abstract_qvec(be)
@@ -610,17 +731,21 @@ class FusionPass(Pass):
                 ivf, q, k=k_in, nprobe=npb))
             build_f = lambda: (lambda ivf, q: DN.ivf_retrieve_topk_fused(
                 ivf, q, k=K, nprobe=npb))
+            probe = lambda n: ((be.ivf,), (_probe_qvecs(be, n),))
         else:
             args = (_abstract_sds(be.dense), qv)
             build_u = lambda: (lambda dn, q: DN.dense_retrieve_exact(
                 dn, q, k=k_in))
             build_f = lambda: (lambda dn, q: DN.dense_retrieve_exact_fused(
                 dn, q, k=K))
-        if self._gate(pctx, "dense_topk", kernel_native=kernel_native(K),
+            probe = lambda n: ((be.dense,), (_probe_qvecs(be, n),))
+        if self._gate(pctx, "dense_topk",
+                      kernel_native=desc.kernel_native("dense_topk", K),
                       args=args,
                       unfused=("dense_topk_unfused", k_in, nprobe),
                       fused=("dense_topk_fused", K, nprobe),
-                      build_unfused=build_u, build_fused=build_f):
+                      build_unfused=build_u, build_fused=build_f,
+                      probe=probe):
             pctx.trace.append(("fuse_dense_topk", op, fused))
             return fused
         return op
@@ -632,8 +757,7 @@ class FusionPass(Pass):
         stage (the rewrite pass has already pushed the pipeline-level cutoff
         onto the last R-producer, so the paper's ``bm25 >> neural % K``
         arrives here in exactly this shape)."""
-        be = pctx.backend
-        if "fused_dense" not in be.capabilities:
+        if not self._desc(pctx).supports("fused_dense"):
             return op
         kids = list(op.inputs)
         changed = False
@@ -655,8 +779,8 @@ class FusionPass(Pass):
                 and b.inputs[0].kind == "dense_rerank"):
             return None
         from repro.index import retrieve as RT
-        from repro.kernels.dense_scoring.ops import kernel_native
         be = pctx.backend
+        desc = self._desc(pctx)
         K = b.params["k"]
         k_in = a.params.get("k") or be.default_k
         if K > k_in:
@@ -668,7 +792,8 @@ class FusionPass(Pass):
         mp = be.max_postings
         fused = leaf(S.FusedDenseRerank(model=model, k_in=k_in, k=K,
                                         alpha=alpha))
-        if self._gate(pctx, "dense_rerank", kernel_native=kernel_native(K),
+        if self._gate(pctx, "dense_rerank",
+                      kernel_native=desc.kernel_native("dense_rerank", K),
                       args=_abstract_dense_rerank_args(be),
                       unfused=("dense_rerank_unfused", model, k_in, K,
                                alpha, mp),
@@ -682,37 +807,179 @@ class FusionPass(Pass):
                           lambda ix, emb, t, w, q:
                           RT.retrieve_dense_rerank_fused(
                               ix, emb, t, w, q, model=model, k_in=k_in, k=K,
-                              alpha=alpha, max_postings=mp))):
+                              alpha=alpha, max_postings=mp)),
+                      probe=lambda n: (
+                          (be.index, be.dense.emb),
+                          (*_probe_queries(be, n), _probe_qvecs(be, n)))):
             pctx.trace.append(("fuse_dense_rerank", Op("then", {}, (a, b)),
                                fused))
             return fused
         return None
 
     def _gate(self, pctx, pattern, *, unfused, fused, build_unfused,
-              build_fused, args, kernel_native: bool = True) -> bool:
+              build_fused, args, kernel_native: bool = True,
+              probe=None, require_measured: bool = False) -> bool:
+        """One gate decision.  Resolution order: persisted TuningProfile hit
+        (zero candidate compiles, zero probes) -> cost estimates -> the
+        subclass ``_decide`` policy (base: estimate-only strict-less-than;
+        AutotunePass: probe-measure inside the uncertainty band).  Fresh
+        decisions are recorded back into the profile."""
         be = pctx.backend
-        est_u = _estimate(be, unfused, build_unfused, args)
-        est_f = _estimate(be, fused, build_fused, args)
-        accepted = (est_u is not None and est_f is not None
-                    and est_f["time_proxy_s"] < est_u["time_proxy_s"])
-        pctx.decisions.append({
-            "pattern": pattern, "accepted": accepted,
-            "kernel_native": kernel_native,
+        desc = self._desc(pctx)
+        prof = desc.profile
+        opk = (pattern, fused, unfused)
+        bd = None
+        if prof is not None:
+            bd = _backend_gate_digest(be)
+            hit = prof.lookup(bd, opk, GATE_MAXQ)
+            if hit is not None:
+                pctx.counters["profile_hits"] += 1
+                d = dict(hit)
+                d["source"] = "profile"
+                pctx.decisions.append(d)
+                return bool(d["accepted"])
+            pctx.counters["profile_misses"] += 1
+        est_u = _estimate(be, desc, unfused, build_unfused, args,
+                          counters=pctx.counters)
+        est_f = _estimate(be, desc, fused, build_fused, args,
+                          counters=pctx.counters)
+        d = self._decide(pctx, desc, est_u, est_f, build_unfused,
+                         build_fused, probe, require_measured)
+        d.update({
+            "pattern": pattern, "kernel_native": kernel_native,
             "unfused_key": unfused, "fused_key": fused,
             "unfused_proxy_s": None if est_u is None else est_u["time_proxy_s"],
             "fused_proxy_s": None if est_f is None else est_f["time_proxy_s"],
+            "unfused_flops": None if est_u is None else est_u["flops_per_chip"],
+            "unfused_bytes": None if est_u is None else est_u["bytes_per_chip"],
+            "fused_flops": None if est_f is None else est_f["flops_per_chip"],
+            "fused_bytes": None if est_f is None else est_f["bytes_per_chip"],
         })
-        return accepted
+        pctx.decisions.append(d)
+        if prof is not None:
+            prof.record(bd, opk, GATE_MAXQ, d)
+        return d["accepted"]
+
+    def _decide(self, pctx, desc, est_u, est_f, build_unfused, build_fused,
+                probe, require_measured: bool = False) -> dict:
+        """Static policy: accept iff the fused estimate prices *strictly*
+        cheaper (lowering failure on either side -> never fuse blind).
+        Semantics-affecting candidates (``require_measured``) are never
+        taken on estimates alone, so the static gate rejects them."""
+        accepted = (not require_measured
+                    and est_u is not None and est_f is not None
+                    and est_f["time_proxy_s"] < est_u["time_proxy_s"])
+        return {"accepted": accepted, "source": "estimate",
+                "unfused_measured_s": None, "fused_measured_s": None}
+
+
+class AutotunePass(FusionPass):
+    """Measurement-driven fusion gate (opt-in: ``descriptor.autotune``).
+
+    Two extensions over the static gate.  (1) When the estimated margin
+    between the candidates, ``|fused - unfused| / unfused`` over the proxy
+    times, is within ``descriptor.autotune_band`` — the regime where the
+    static roofline is least trustworthy — both lowerings are wall-clock
+    measured on a small concrete probe batch and the *measured* winner is
+    recorded.  (2) Mixed-k ``linear()`` combinations, which the equivalence
+    rewriter must skip (per-model truncation depths differ), are lowered to
+    a single MultiRetrieve when — and only when — measured faster.  Either
+    way the decision lands in the TuningProfile exactly like the static
+    gate's, so the next compile replays it with zero probes."""
+    name = "autotune"
+
+    def _decide(self, pctx, desc, est_u, est_f, build_unfused, build_fused,
+                probe, require_measured: bool = False) -> dict:
+        d = super()._decide(pctx, desc, est_u, est_f, build_unfused,
+                            build_fused, probe, require_measured)
+        measure = require_measured
+        if not measure and est_u is not None and est_f is not None:
+            pu, pf = est_u["time_proxy_s"], est_f["time_proxy_s"]
+            measure = pu > 0 and abs(pf - pu) / pu <= desc.autotune_band
+        if not measure or probe is None:
+            return d
+        try:
+            static_args, batched_args = probe(desc.probe_queries)
+            m_u = _measure_callable(build_unfused(), static_args,
+                                    batched_args, desc.probe_repeats)
+            m_f = _measure_callable(build_fused(), static_args,
+                                    batched_args, desc.probe_repeats)
+        except Exception:
+            return d               # probe failure: fall back to the estimate
+        pctx.counters["probe_measurements"] += 2
+        d.update({"accepted": bool(m_f < m_u), "source": "measured",
+                  "unfused_measured_s": m_u, "fused_measured_s": m_f})
+        return d
+
+    def _tune_mixed_linear(self, op: Op, pctx: PassContext) -> Op:
+        """Σ wᵢ·Retrieve(mᵢ, kᵢ) with *differing* kᵢ -> MultiRetrieve at
+        max(kᵢ) when measured faster.  ``retrieve_multi`` combines the full
+        dense score vectors before the final top-k (no per-model
+        truncation), so the fused program is identical whatever the
+        children's ks — but it is NOT equivalent to the truncating unfused
+        sum, hence measured-only."""
+        desc = self._desc(pctx)
+        be = pctx.backend
+        if not desc.supports("multi_model"):
+            return op
+        ks, models = [], []
+        for c in op.inputs:
+            if c.kind != "retrieve":
+                return op
+            ks.append(min(c.params["k"] or be.default_k, be.index.n_docs))
+            models.append(c.params["model"])
+        if len(models) < 2 or len(set(ks)) == 1:
+            return op
+        import jax.numpy as jnp
+
+        from repro.index import retrieve as RT
+        mtuple = tuple(models)
+        weights = tuple(op.params["weights"])
+        kmax = max(ks)
+        mp = be.max_postings
+        mw = jnp.asarray(weights, jnp.float32)
+
+        def build_fused():
+            def f(ix, t, w):
+                return RT.retrieve_multi(ix, t, w, mw, models=mtuple,
+                                         k=kmax, max_postings=mp)
+            return f
+
+        def build_unfused():
+            def f(ix, t, w):
+                return tuple(
+                    RT.retrieve_topk(ix, t, w, model=m, k=kc,
+                                     max_postings=mp)
+                    for m, kc in zip(mtuple, ks))
+            return f
+
+        fused = leaf(S.MultiRetrieve(models=mtuple, weights=weights, k=kmax))
+        if self._gate(pctx, "multi_mixed", kernel_native=True,
+                      args=_abstract_args(be),
+                      unfused=("multi_mixed_unfused", mtuple, tuple(ks), mp),
+                      fused=("multi_mixed_fused", mtuple, weights, kmax, mp),
+                      build_unfused=build_unfused, build_fused=build_fused,
+                      probe=lambda n: ((be.index,), _probe_queries(be, n)),
+                      require_measured=True):
+            pctx.trace.append(("tune_multi_mixed", op, fused))
+            return fused
+        return op
 
 
 # ---------------------------------------------------------------------------
 # entry points
 # ---------------------------------------------------------------------------
 
-def default_passes(max_rewrite_iters: int = 20) -> list[Pass]:
+def default_passes(descriptor: BackendDescriptor | None = None,
+                   max_rewrite_iters: int = 20) -> list[Pass]:
+    """The standard pass pipeline, parameterised by the backend descriptor
+    (None = resolve from the PassContext per run, the legacy behaviour).
+    ``descriptor.autotune`` selects the measurement-driven fusion gate."""
+    fusion_cls = AutotunePass if (descriptor is not None
+                                  and descriptor.autotune) else FusionPass
     return [CanonicalizePass(), SchemaPass("schema_inference"),
-            RewritePass(max_iters=max_rewrite_iters), CSEPass(), FusionPass(),
-            SchemaPass("schema_check")]
+            RewritePass(descriptor, max_iters=max_rewrite_iters), CSEPass(),
+            fusion_cls(descriptor), SchemaPass("schema_check")]
 
 
 def compile_pipeline(node: Transformer | Op, backend, *,
@@ -734,11 +1001,14 @@ def compile_pipeline(node: Transformer | Op, backend, *,
         return op
     pctx = pctx or PassContext(backend, trace=trace, cse_table=cse_table,
                                keep_snapshots=keep_snapshots)
-    op = PassManager(default_passes(max_rewrite_iters)).run(op, pctx)
+    passes = default_passes(pctx.descriptor,
+                            max_rewrite_iters=max_rewrite_iters)
+    op = PassManager(passes).run(op, pctx)
     if report is not None:
         report["pass_timings_s"] = list(pctx.timings)
         report["fusion_decisions"] = list(pctx.decisions)
         report["snapshots"] = list(pctx.snapshots)
+        report["tuning"] = dict(pctx.counters)
     return op
 
 
@@ -762,10 +1032,15 @@ def explain_pipeline(node: Transformer, backend=None, *,
                                                                    backend)))
     for d in pctx.decisions:
         fmt = lambda v: "n/a" if v is None else f"{v:.4e}s"
-        out.append(f"-- fusion gate [{d['pattern']}]: "
-                   f"{'fused' if d['accepted'] else 'kept unfused'} "
-                   f"(fused {fmt(d['fused_proxy_s'])} vs "
-                   f"unfused {fmt(d['unfused_proxy_s'])})")
+        line = (f"-- fusion gate [{d['pattern']}]: "
+                f"{'fused' if d['accepted'] else 'kept unfused'} "
+                f"(predicted fused {fmt(d['fused_proxy_s'])} vs "
+                f"unfused {fmt(d['unfused_proxy_s'])}")
+        if d.get("fused_measured_s") is not None:
+            line += (f"; measured fused {fmt(d['fused_measured_s'])} vs "
+                     f"unfused {fmt(d['unfused_measured_s'])}")
+        line += f", {d.get('source', 'estimate')})"
+        out.append(line)
     return "\n".join(out)
 
 

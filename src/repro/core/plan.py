@@ -231,6 +231,11 @@ class ExperimentPlan:
                                      trace=self.traces[i],
                                      cse_table=cse_table)
                     for i, p in enumerate(self.pipelines)]
+        # publish any fresh autotune/gate decisions now, so a second
+        # Experiment (or another process) compiles this plan profile-warm
+        prof = getattr(backend, "descriptor", None) and backend.descriptor.profile
+        if prof:
+            prof.save()
         self.chains = [ir.chain(op) for op in self.ops]
         self.root = PlanNode(None, None)
         self.root.persist = "root"

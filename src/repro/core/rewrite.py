@@ -31,7 +31,11 @@ def _clone(node: Transformer, children) -> Transformer:
 
 def optimize_pipeline(root: Transformer, backend, *, max_iters: int = 20,
                       trace: list | None = None) -> Transformer:
-    """Optimise a pipeline against ``backend``'s capability descriptor.
+    """Optimise a pipeline against ``backend``'s
+    :class:`~repro.core.descriptor.BackendDescriptor` (capability flags,
+    kernel limits, calibrated roofline peaks, optional tuning profile /
+    autotune policy — ``as_descriptor`` adapts legacy flat-``capabilities``
+    backends).
 
     Shim over the pass-manager compiler: ``lower -> canonicalise -> schema
     inference -> rewrite rules -> CSE -> cost-gated fusion -> raise``.

@@ -71,7 +71,12 @@ class PipelineServer:
                  cache: StageResultCache | None = None):
         self.backend = backend
         self.engine = backend.engine
-        self.op = compile_pipeline(pipeline, backend, optimize=optimize)
+        #: compile report: pass timings, gate decisions and tuning counters
+        #: (``compile_report['tuning']['profile_hits']`` > 0 with zero
+        #: gate_estimates/probe_measurements = a profile-warm restart)
+        self.compile_report: dict = {}
+        self.op = compile_pipeline(pipeline, backend, optimize=optimize,
+                                   report=self.compile_report)
         self.chain = ir.chain(self.op)
         self._stateful = self.op.stateful_subtree()
         self._digest_scope = f"serve:be{backend.uid}:"
@@ -209,10 +214,19 @@ class PipelineServer:
             jax.block_until_ready((Q, R))
         if self.engine is not None:
             self._warm_compiles = self.engine.total_compiles()
-        return {"warmup_s": round(time.monotonic() - t0, 3),
-                "buckets": list(self.scheduler.ladder),
-                "compiles": (None if self.engine is None
-                             else self.engine.total_compiles())}
+        out = {"warmup_s": round(time.monotonic() - t0, 3),
+               "buckets": list(self.scheduler.ladder),
+               "compiles": (None if self.engine is None
+                            else self.engine.total_compiles())}
+        # persist any autotune decisions taken at compile time, so the next
+        # server process starts profile-warm (zero gate compiles / probes)
+        desc = getattr(self.backend, "descriptor", None)
+        if desc is not None and desc.profile is not None:
+            desc.profile.save()
+            out["tuning_profile"] = desc.profile.info()
+        if self.compile_report:
+            out["tuning"] = self.compile_report.get("tuning")
+        return out
 
     # -- batch execution ----------------------------------------------------
     def _execute_batch(self, batch) -> None:
@@ -351,4 +365,9 @@ class PipelineServer:
         else:
             out["engine"] = None
             out["recompiles_since_warmup"] = None
+        out["tuning"] = self.compile_report.get("tuning")
+        desc = getattr(self.backend, "descriptor", None)
+        out["tuning_profile"] = (desc.profile.info()
+                                 if desc is not None and desc.profile
+                                 else None)
         return out
