@@ -192,9 +192,12 @@ def main() -> None:
                   f"{wl['batched_beats_naive_at_saturation']}")
             for lvl in wl["levels"]:
                 b, nv = lvl["batched"], lvl["naive"]
+                shed = (f" shed={b['shed']}"
+                        if lvl.get("deadline_ms") is not None else "")
                 print(f"  [{lvl['level']}] {b['offered_qps']} q/s offered: "
                       f"batched p95={b['p95_ms']}ms "
                       f"tput={b['throughput_qps']} "
+                      f"goodput={b['goodput_qps']}{shed} "
                       f"| naive p95={nv['p95_ms']}ms "
                       f"tput={nv['throughput_qps']}")
                 csv_rows.append({
@@ -202,12 +205,27 @@ def main() -> None:
                     "us_per_call": round(b["p95_ms"] * 1000, 1),
                     "derived": (f"tput={b['throughput_qps']}q/s,"
                                 f"goodput={b['goodput_qps']}q/s,"
+                                f"shed={b['shed']},"
                                 f"batch={b['mean_batch_size']},"
                                 f"offered={b['offered_qps']}q/s")})
                 csv_rows.append({
                     "name": f"serve_{name}_{lvl['level']}_naive",
                     "us_per_call": round(nv["p95_ms"] * 1000, 1),
                     "derived": f"tput={nv['throughput_qps']}q/s"})
+        tt = sv.get("two_tenant")
+        if tt:
+            print(f"[two_tenant] pipelines={tt['pipelines']} "
+                  f"served={tt['served']}/{tt['n_requests']} "
+                  f"cross_prefix_hits={tt['cross_pipeline_hits']} "
+                  f"lanes={tt['lane_served']} "
+                  f"recompiles_after_warmup={tt['recompiles_since_warmup']}")
+            csv_rows.append({
+                "name": "serve_two_tenant",
+                "us_per_call": round(1e6 / max(tt["throughput_qps"], 1e-9),
+                                     1),
+                "derived": (f"cross_hits={tt['cross_pipeline_hits']},"
+                            f"served={tt['served']},"
+                            f"recompiles={tt['recompiles_since_warmup']}")})
 
     # --- ENGINE: device-sharded query throughput -------------------------
     if not args.skip_ir:

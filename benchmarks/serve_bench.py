@@ -1,5 +1,6 @@
 """Open-loop serving benchmark: continuous micro-batching vs naive
-per-request execution under Poisson arrivals.
+per-request execution under Poisson arrivals, with deadline-aware shedding
+at and past saturation, plus a two-tenant shared-cache workload.
 
 Protocol (open loop — the standard serving methodology): arrival times are
 drawn ahead of time from a Poisson process at several offered-QPS levels; a
@@ -9,16 +10,30 @@ load); latency is measured from the *intended* arrival.  The naive baseline
 is the same server with ``max_batch=1`` — every request executes alone, in
 arrival order — so the delta isolates exactly the micro-batching policy.
 
-Reported per (workload x offered level): p50/p95/p99 latency, throughput
-(all completions per second of makespan), goodput (completions within the
-SLO), mean batch size, and rejection counts.  Levels are placed relative
-to *measured* capacity — see ``LOAD_LEVELS`` for the placement and why
-light load references naive capacity.  The ``gated`` block names the
-trajectory metrics CI compares across pushes: light-load batched p95
-(``<wl>.light.p95_ms``, lower better), mid-load batched goodput
-(``<wl>.mid.goodput_qps``, higher better — see the comment at the gated
-block for why goodput gates at mid, not saturation), and saturation
-batched throughput (``<wl>.sat.throughput_qps``, higher better).
+Levels are placed relative to *measured* capacity — see ``LOAD_LEVELS``
+for the placement and why light load references naive capacity.  The two
+under-capacity levels run without deadlines (every request must complete);
+``sat`` and ``overload`` attach the SLO as a per-request deadline, which
+engages shed-before-execute: the scheduler rejects/drops requests whose
+deadline cannot survive the estimated queue wait, so ladder slots are
+spent only on answers that arrive in time and **goodput tracks throughput**
+instead of collapsing to ~0 as the unbounded queue blows every SLO.
+Throughput/goodput therefore count *served* completions (shed requests are
+reported separately), and each level reports shed/rejection counts.
+
+The ``gated`` block names the trajectory metrics CI compares across
+pushes: light-load batched p95 (``<wl>.light.p95_ms``, lower better),
+mid-load batched goodput (``<wl>.mid.goodput_qps``, higher better — under
+capacity the value is stable and an SLO-violating batching regression
+collapses it), saturation batched throughput
+(``<wl>.sat.throughput_qps``, higher better), and saturation batched
+goodput (``<wl>.sat.goodput_qps``, higher better — the shedding policy's
+headline: before deadline-aware shedding this was ~0).
+
+``two_tenant`` serves two pipelines sharing a retrieval prefix over ONE
+server (one engine, one scheduler, one stage cache, WFQ lanes): tenant B
+resumes mid-chain from prefix state tenant A computed, surfaced as
+``cross_pipeline_hits``, with zero steady-state recompiles.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--scale small]
 """
@@ -30,21 +45,24 @@ import time
 
 import numpy as np
 
-from repro.core import DenseRerank, JaxBackend, Retrieve
+from repro.core import DenseRerank, Extract, JaxBackend, Retrieve
 from repro.core.data import make_queries
-from repro.serve import PipelineServer, ServerOverloaded
+from repro.serve import (DeadlineUnmeetable, MultiPipelineServer,
+                         PipelineServer, ServeConfig, ServerOverloaded)
 from repro.serve.trace import latency_summary
 
-#: offered-load levels as (name, capacity reference, multiplier).  Light
-#: load is placed relative to the NAIVE capacity: with near-empty queues
-#: batches do not fill, so the batched server's effective light-load
+#: offered-load levels as (name, capacity reference, multiplier, deadline?).
+#: Light load is placed relative to the NAIVE capacity: with near-empty
+#: queues batches do not fill, so the batched server's effective light-load
 #: capacity is the per-request one — a level at a fraction of *batched*
-#: capacity would already saturate it.  Saturation is relative to batched
-#: capacity so both configurations are past their limit and the comparison
-#: is pure throughput.
-LOAD_LEVELS = (("light", "naive", 0.4),
-               ("mid", "naive", 1.2),
-               ("sat", "batched", 2.0))
+#: capacity would already saturate it.  Saturation/overload are relative to
+#: batched capacity so both configurations are past their limit and the
+#: comparison is pure throughput; those levels attach the SLO as each
+#: request's deadline so shed-before-execute engages.
+LOAD_LEVELS = (("light", "naive", 0.4, False),
+               ("mid", "naive", 1.2, False),
+               ("sat", "batched", 2.0, True),
+               ("overload", "batched", 4.0, True))
 SLO_MS = 250.0
 
 
@@ -73,51 +91,67 @@ def _rows(Q, n: int, seed: int = 0):
 def _measure_capacity(server: PipelineServer, rows, *, burst: int = 64) -> float:
     """Closed-loop capacity: serve a standing burst, steady-state QPS."""
     for row in rows[:burst]:
-        server.submit(row)
+        server.submit_one(row)
     server.pump()                                     # warm path
     t0 = time.monotonic()
     for row in rows[:burst]:
-        server.submit(row)
+        server.submit_one(row)
     server.pump()
     return burst / (time.monotonic() - t0)
 
 
 def _run_level(server: PipelineServer, rows, offered_qps: float,
-               seed: int) -> dict:
+               seed: int, *, timeout_ms: float | None = None) -> dict:
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / offered_qps, len(rows))
     arrivals = np.cumsum(gaps)
     server.start()
-    reqs, n_rejected = [], 0
+    reqs, n_rejected, n_shed_door = [], 0, 0
     t0 = time.monotonic() + 0.005
     for row, a in zip(rows, arrivals):
         dt = t0 + a - time.monotonic()
         if dt > 0:
             time.sleep(dt)
         try:
-            # no per-request deadline: at saturation every request must
-            # complete so throughput (not shed volume) is what's compared
-            reqs.append((a, server.submit(row, timeout_ms=None)))
-        except ServerOverloaded:
+            # under-capacity levels run deadline-free (every request must
+            # complete); sat/overload attach the SLO so shedding engages
+            reqs.append((a, server.submit_one(row, timeout_ms=timeout_ms)))
+        except DeadlineUnmeetable:       # shed at the door (before queueing)
+            n_shed_door += 1
+        except ServerOverloaded:         # bounded queue full
             n_rejected += 1
     for _, r in reqs:
         r.done.wait(timeout=300)
     server.stop()
     lat, n_good, t_last = [], 0, t0
+    n_shed_queue = n_expired = 0
     for a, r in reqs:
+        if r.trace.timed_out:
+            if r.trace.shed:
+                n_shed_queue += 1        # shed at batch close, pre-execution
+            else:
+                n_expired += 1           # expired in queue (no shed verdict)
+            continue
         l_ms = 1000.0 * (r.trace.t_done - (t0 + a))   # open-loop latency
         lat.append(l_ms)
         t_last = max(t_last, r.trace.t_done)
         if l_ms <= SLO_MS:
             n_good += 1
     makespan = max(t_last - t0, 1e-9)
-    sizes = [r.trace.batch_size for _, r in reqs]
+    sizes = [r.trace.batch_size for _, r in reqs if not r.trace.timed_out]
     return {
         "offered_qps": round(offered_qps, 1),
         "n_requests": len(rows),
+        "served": len(lat),
         "rejected": n_rejected,
+        "shed": n_shed_door + n_shed_queue,
+        "shed_door": n_shed_door,
+        "shed_queue": n_shed_queue,
+        "expired": n_expired,
         "throughput_qps": round(len(lat) / makespan, 1),
         "goodput_qps": round(n_good / makespan, 1),
+        "goodput_over_throughput": (round(n_good / len(lat), 3)
+                                    if lat else 0.0),
         "mean_batch_size": (round(sum(sizes) / len(sizes), 2)
                             if sizes else 0.0),
         **latency_summary(lat),
@@ -127,10 +161,54 @@ def _run_level(server: PipelineServer, rows, offered_qps: float,
 def _server(pipe, backend, *, naive: bool) -> PipelineServer:
     # naive = per-request execution: batches of one, closed immediately.
     # Caches identical on both sides so the delta is the batching policy.
-    return PipelineServer(pipe, backend, max_queue=4096,
-                          max_wait_ms=0.0 if naive else 4.0,
-                          max_batch=1 if naive else None,
-                          cache_entries=0)
+    cfg = (ServeConfig.default(max_queue=4096, cache_entries=0)
+           .with_batching(max_batch=1 if naive else None,
+                          max_wait_ms=0.0 if naive else 4.0))
+    return PipelineServer(pipe, backend, cfg)
+
+
+def bench_two_tenant(index, Q, dense, *, k_in: int = 100,
+                     n_requests: int = 96, seed: int = 0) -> dict:
+    """Two pipelines sharing a retrieval prefix multiplexed over ONE server:
+    one engine, one scheduler, one stage cache, WFQ lanes.  Tenant B
+    resumes mid-chain from prefix state tenant A computed (and vice versa)
+    — the online realisation of the planner's shared-prefix trie."""
+    be = JaxBackend(index, default_k=1000, query_chunk=8, dense=dense)
+    cfg = (ServeConfig.default(optimize=False, max_queue=4096)
+           .with_lanes(("interactive", 4.0), ("background", 1.0)))
+    server = MultiPipelineServer(
+        {"ql": Retrieve("BM25", k=k_in) >> Extract("QL"),
+         "tfidf": Retrieve("BM25", k=k_in) >> Extract("TF_IDF")},
+        be, cfg)
+    warm = server.warmup(Q)
+    rows = _rows(Q, n_requests, seed)
+    t0 = time.monotonic()
+    reqs = []
+    for j, row in enumerate(rows):
+        reqs.append(server.submit_one(
+            row, pipeline=("ql", "tfidf")[j % 2],
+            lane=("interactive", "background")[j % 2]))
+        if j % 16 == 15:                 # several mixed-tenant batches
+            server.pump()
+    server.pump()
+    for r in reqs:
+        r.done.wait(60)
+    dt = max(time.monotonic() - t0, 1e-9)
+    s = server.stats()
+    return {
+        "pipelines": sorted(s["pipelines"]),
+        "n_requests": len(rows),
+        "served": s["served"],
+        "throughput_qps": round(len(rows) / dt, 1),
+        "cross_pipeline_hits": s["cross_pipeline_hits"],
+        "lane_served": s["lane_served"],
+        "per_pipeline": {
+            name: {"served": t["served"],
+                   "cross_prefix_hits": t["cross_pipeline_prefix_hits"]}
+            for name, t in s["pipelines"].items()},
+        "recompiles_since_warmup": s["recompiles_since_warmup"],
+        "warmup_s": warm["warmup_s"],
+    }
 
 
 def bench_serving(env, *, k: int = 10, k_in: int = 100, seed: int = 0) -> dict:
@@ -153,19 +231,22 @@ def bench_serving(env, *, k: int = 10, k_in: int = 100, seed: int = 0) -> dict:
         cap = {"batched": _measure_capacity(batched, rows),
                "naive": _measure_capacity(naive, rows)}
         levels = []
-        for li, (lname, ref, mult) in enumerate(LOAD_LEVELS):
+        for li, (lname, ref, mult, deadline) in enumerate(LOAD_LEVELS):
             offered = max(mult * cap[ref], 2.0)
             n = int(np.clip(round(offered * 1.2), 32, 192))
             lvl_rows = _rows(Q, n, seed + 11 * li)
+            tmo = SLO_MS if deadline else None
             levels.append({
                 "level": lname,
                 "offered": f"{mult}x {ref} capacity",
-                "batched": _run_level(batched, lvl_rows, offered, seed + 1),
-                "naive": _run_level(naive, lvl_rows, offered, seed + 2),
+                "deadline_ms": tmo,
+                "batched": _run_level(batched, lvl_rows, offered, seed + 1,
+                                      timeout_ms=tmo),
+                "naive": _run_level(naive, lvl_rows, offered, seed + 2,
+                                    timeout_ms=tmo),
             })
-        sat = levels[-1]
-        mid = levels[1]
-        light = levels[0]
+        by_name = {lvl["level"]: lvl for lvl in levels}
+        light, mid, sat = by_name["light"], by_name["mid"], by_name["sat"]
         wl = {
             "chain_len": len(batched.chain),
             "warmup": warm,
@@ -180,14 +261,18 @@ def bench_serving(env, *, k: int = 10, k_in: int = 100, seed: int = 0) -> dict:
         out["workloads"][name] = wl
         out["gated"][f"{name}.light.p95_ms"] = {
             "value": light["batched"]["p95_ms"], "better": "lower"}
-        # goodput is gated at MID load: there the batched server runs
-        # comfortably inside the SLO so the value is stable (~offered),
-        # and an SLO-violating batching regression collapses it; at
-        # saturation goodput is queue-position noise on both sides
+        # goodput gates BOTH under capacity (mid: stable ~offered, collapses
+        # on an SLO-violating batching regression) and at saturation (the
+        # shedding policy's headline — pre-shedding this was ~0 because the
+        # unbounded backlog blew every SLO)
         out["gated"][f"{name}.mid.goodput_qps"] = {
             "value": mid["batched"]["goodput_qps"], "better": "higher"}
         out["gated"][f"{name}.sat.throughput_qps"] = {
             "value": sat["batched"]["throughput_qps"], "better": "higher"}
+        out["gated"][f"{name}.sat.goodput_qps"] = {
+            "value": sat["batched"]["goodput_qps"], "better": "higher"}
+    out["two_tenant"] = bench_two_tenant(index, Q, dense, k_in=k_in,
+                                         seed=seed)
     return out
 
 

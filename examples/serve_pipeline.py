@@ -1,7 +1,9 @@
 """Serving example: the same declarative pipeline run two ways — as an
 offline Experiment, then as a long-lived online service through
-``PipelineServer`` (continuous micro-batching over the compiled pipeline),
-plus an LM generation stage behind the decode continuous batcher.
+``PipelineServer`` (continuous micro-batching over the compiled pipeline)
+configured with ``ServeConfig`` builders, multiplexing a second tenant
+pipeline over the same engine/scheduler/stage-cache (WFQ lanes, shared
+prefix hits), plus an LM generation stage behind the decode batcher.
 
     PYTHONPATH=src python examples/serve_pipeline.py
 """
@@ -14,7 +16,7 @@ from repro.core import DenseRerank, Experiment, JaxBackend, Retrieve, format_tab
 from repro.core.data import make_queries
 from repro.index import build_index, synthesize_corpus, synthesize_topics
 from repro.models import transformer_lm as tlm
-from repro.serve import PipelineServer
+from repro.serve import PipelineServer, ServeConfig
 from repro.serve.batching import ContinuousBatcher, Request
 
 
@@ -33,14 +35,22 @@ def main():
                      names=["bm25@20", "bm25>>dense"], measure_time=True)
     print(format_table(res["table"]))
 
-    # --- the same pipeline as an online service -----------------------------
-    server = PipelineServer(pipe, backend, max_wait_ms=4.0)
-    server.warmup(Q)                     # compile every (stage, bucket) pair
-    server.start()
+    # --- the same pipeline as a multi-tenant online service -----------------
+    cfg = (ServeConfig.default()
+           .with_batching(max_wait_ms=4.0)
+           .with_lanes(("interactive", 4.0), ("background", 1.0),
+                       default="interactive"))
+    server = PipelineServer(pipe, backend, cfg, name="dense")
+    server.add_pipeline(Retrieve("BM25") % 20, name="bm25")  # second tenant:
+    server.warmup(Q)       # compile every (stage, bucket) pair, per tenant
+    server.start()         # shares the dense tenant's BM25 prefix via cache
     reqs = []
     for i in range(24):                  # queries arrive one at a time
         row = {k: np.asarray(v)[i % 12:i % 12 + 1] for k, v in Q.items()}
-        reqs.append(server.submit(row))
+        tenant = "dense" if i < 12 else "bm25"
+        reqs.append(server.submit_one(
+            row, pipeline=tenant,
+            lane="interactive" if tenant == "dense" else "background"))
         time.sleep(0.002)
     results = [r.wait(timeout=30) for r in reqs]
     server.stop()
@@ -50,6 +60,8 @@ def main():
           f"p50={s['latency_ms']['p50_ms']}ms "
           f"p95={s['latency_ms']['p95_ms']}ms; "
           f"cache hit depths {s['cache_hit_depths']}; "
+          f"cross-pipeline prefix hits: {s['cross_pipeline_hits']}; "
+          f"lane slots {s['lane_served']}; "
           f"recompiles after warmup: {s['recompiles_since_warmup']}")
     top = np.asarray(results[0]["docids"])[0, :5]
     print(f"rid=1 top-5 docids: {top}")

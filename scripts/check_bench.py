@@ -17,9 +17,15 @@ REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense", "serve",
             "autotune")
 
 #: every serve workload must report at least this many offered-load levels
-#: (acceptance: p50/p95/p99 at >= 3 levels, batched vs naive)
+#: (p50/p95/p99 batched vs naive at light/mid/sat/overload)
 SERVE_WORKLOADS = ("bm25_topk", "bm25_dense_rerank")
-SERVE_MIN_LEVELS = 3
+SERVE_MIN_LEVELS = 4
+
+#: at saturation the deadline-aware scheduler must keep goodput tracking
+#: throughput on the heavy workload (pre-shedding it collapsed to ~0: the
+#: unbounded backlog blew every SLO)
+SERVE_GOODPUT_WORKLOAD = "bm25_dense_rerank"
+SERVE_MIN_GOODPUT_FRAC = 0.5
 
 
 def main() -> int:
@@ -71,9 +77,53 @@ def main() -> int:
                   "not beat naive per-request throughput at saturation",
                   file=sys.stderr)
             return 1
+        by_level = {lvl.get("level"): lvl for lvl in levels}
+        for lname in ("sat", "overload"):
+            b = by_level.get(lname, {}).get("batched", {})
+            missing_keys = [k for k in ("goodput_qps", "shed", "shed_door",
+                                        "shed_queue") if k not in b]
+            if lname not in by_level or missing_keys:
+                print(f"FAIL: serve workload {name!r} lacks a deadline-"
+                      f"aware {lname!r} level with goodput + shed counts "
+                      f"(missing: {missing_keys or 'level'})",
+                      file=sys.stderr)
+                return 1
+        sat_b = by_level["sat"]["batched"]
+        if sat_b["goodput_qps"] < SERVE_MIN_GOODPUT_FRAC * \
+                sat_b["throughput_qps"] and name == SERVE_GOODPUT_WORKLOAD:
+            print(f"FAIL: serve workload {name!r} saturation goodput "
+                  f"{sat_b['goodput_qps']} < {SERVE_MIN_GOODPUT_FRAC}x "
+                  f"throughput {sat_b['throughput_qps']} (deadline-aware "
+                  "shedding is not holding the SLO)", file=sys.stderr)
+            return 1
     if not serve.get("gated"):
         print("FAIL: serve section has no gated trajectory metrics",
               file=sys.stderr)
+        return 1
+    missing_gate = [f"{w}.sat.goodput_qps" for w in SERVE_WORKLOADS
+                    if f"{w}.sat.goodput_qps" not in serve["gated"]]
+    if missing_gate:
+        print(f"FAIL: serve gated block lacks saturation goodput metrics: "
+              f"{missing_gate}", file=sys.stderr)
+        return 1
+    tt = serve.get("two_tenant")
+    if not tt:
+        print("FAIL: serve section has no two_tenant workload",
+              file=sys.stderr)
+        return 1
+    if not tt.get("cross_pipeline_hits", 0) > 0:
+        print(f"FAIL: two-tenant serve workload recorded no cross-pipeline "
+              f"prefix hits: {tt}", file=sys.stderr)
+        return 1
+    if tt.get("recompiles_since_warmup") != 0:
+        print(f"FAIL: two-tenant serve workload recompiled after warmup "
+              f"({tt.get('recompiles_since_warmup')})", file=sys.stderr)
+        return 1
+    starved = [n for n, p in tt.get("per_pipeline", {}).items()
+               if not p.get("served")]
+    if len(tt.get("per_pipeline", {})) < 2 or starved:
+        print(f"FAIL: two-tenant serve workload did not serve every "
+              f"pipeline (starved: {starved})", file=sys.stderr)
         return 1
     at = summary["autotune"]
     for field in ("cold_tune_s", "warm_compile_s", "warm_profile_reuse"):

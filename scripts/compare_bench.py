@@ -12,8 +12,10 @@ just produced it.
 
 Compared metrics are the fused-path QPS figures the fusion work optimises
 for (``fusion`` + ``dense`` workloads and the IVF probe path) plus the
-serving trajectory (light-load p95 latency and saturation throughput per
-serve workload, from the serve section's ``gated`` block).  A metric
+serving trajectory (light-load p95 latency, mid-load and saturation
+goodput, and saturation throughput per serve workload, from the serve
+section's ``gated`` block — saturation goodput is the deadline-aware
+scheduler's headline and is gated direction-aware alongside throughput).  A metric
 present in both summaries that regressed by more than the threshold fails
 the job — "regressed" is direction-aware (QPS falling, latency rising).
 Metrics only present on one side (new workload, renamed section) are
@@ -142,6 +144,12 @@ def main() -> int:
     if not any(n.endswith(".fused_qps") for n in cur_m):
         print("FAIL: current summary has no fused-path QPS metrics "
               "(did the fusion/dense sections go missing?)", file=sys.stderr)
+        return 1
+    if cur.get("serve") and not any(n.endswith(".sat.goodput_qps")
+                                    for n in cur_m):
+        print("FAIL: current summary's serve section gates no saturation "
+              "goodput metric (did the deadline-aware levels go missing?)",
+              file=sys.stderr)
         return 1
     for section in missing_sections(prev, cur):
         print(f"  note: previous artifact predates the {section!r} section; "

@@ -154,6 +154,31 @@ class LRU:
 
 
 # ---------------------------------------------------------------------------
+# bucket ladder policy (shared by the engine and the serving scheduler)
+# ---------------------------------------------------------------------------
+
+
+def select_ladder_bucket(ladder, n: int, *, clamp: bool = False) -> int:
+    """Smallest rung of a sorted bucket ``ladder`` covering an ``n``-query
+    micro-batch.  This is THE ladder policy — the engine's padding rule and
+    the serving scheduler's batch-closure rule are the same function, so
+    the two can never drift.  ``clamp=True`` returns the largest rung for
+    oversized ``n`` (schedulers report a bucket for any batch they could
+    close); ``clamp=False`` raises (the engine chunk-plans big batches
+    instead of silently truncating them)."""
+    if n <= 0:
+        raise ValueError("empty query batch")
+    for b in ladder:
+        if b >= n:
+            return int(b)
+    if clamp:
+        return int(ladder[-1])
+    raise ValueError(
+        f"micro-batch of {n} exceeds largest bucket {ladder[-1]}; "
+        f"split it (run() chunk-plans big batches automatically)")
+
+
+# ---------------------------------------------------------------------------
 # misc
 # ---------------------------------------------------------------------------
 

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.common import LRU
+from repro.common import LRU, select_ladder_bucket
 from repro.launch.mesh import make_query_mesh
 
 
@@ -123,6 +123,12 @@ class ShardedQueryEngine:
         self.n_dispatches = 0
         self.n_chunk_cache_hits = 0
         self.n_chunk_cache_misses = 0
+        #: bucket -> EWMA of measured batch service seconds, fed back by the
+        #: serving layer (``note_service_time``) after each executed
+        #: micro-batch; the deadline-aware scheduler prices its
+        #: shed-before-execute decisions off these observations
+        self._service_ewma: dict[int, float] = {}
+        self._service_alpha = 0.2
 
     # -- chunk planning -----------------------------------------------------
     def chunk_plan(self, nq: int) -> tuple[tuple[int, int, int], ...]:
@@ -212,15 +218,36 @@ class ShardedQueryEngine:
     def select_bucket(self, n: int) -> int:
         """Smallest ladder bucket covering an ``n``-query micro-batch — the
         serving scheduler's batch-closure rule (a batch at the largest
-        bucket is 'full'; anything smaller pads up to its covering rung)."""
-        if n <= 0:
-            raise ValueError("empty query batch")
-        if n > self.ladder[-1]:
-            raise ValueError(
-                f"micro-batch of {n} exceeds largest bucket "
-                f"{self.ladder[-1]}; split it (run() chunk-plans big "
-                f"batches automatically)")
-        return next(b for b in self.ladder if b >= n)
+        bucket is 'full'; anything smaller pads up to its covering rung).
+        One shared implementation (:func:`repro.common.select_ladder_bucket`)
+        backs both this and the scheduler's copy, so the ladder policy
+        cannot drift between them."""
+        return select_ladder_bucket(self.ladder, n)
+
+    # -- service-time feedback ----------------------------------------------
+    def note_service_time(self, bucket: int, seconds: float) -> None:
+        """Record one measured micro-batch service time for ``bucket``
+        (EWMA).  Fed by the serving layer after each executed batch; the
+        scheduler's shedding math and the bench's capacity accounting read
+        the estimates back via :meth:`service_time_estimate`."""
+        prev = self._service_ewma.get(bucket)
+        a = self._service_alpha
+        self._service_ewma[bucket] = (seconds if prev is None
+                                      else (1.0 - a) * prev + a * seconds)
+
+    def service_time_estimate(self, bucket: int | None = None) -> float | None:
+        """EWMA service seconds for ``bucket`` (falling back to the nearest
+        observed rung), or the worst observed rung when ``bucket`` is None.
+        None until the first observation."""
+        if not self._service_ewma:
+            return None
+        if bucket is None:
+            return max(self._service_ewma.values())
+        if bucket in self._service_ewma:
+            return self._service_ewma[bucket]
+        near = min(self._service_ewma,
+                   key=lambda b: (abs(b - bucket), b))
+        return self._service_ewma[near]
 
     def run(self, program: StageProgram, Q, *extra):
         """Execute one IR stage program over the query axis: vmap
@@ -326,4 +353,6 @@ class ShardedQueryEngine:
             "chunk_cache_hits": self.n_chunk_cache_hits,
             "chunk_cache_misses": self.n_chunk_cache_misses,
             "cache_info": self.cache_info(),
+            "service_ms_ewma": {b: round(1000.0 * s, 3)
+                                for b, s in sorted(self._service_ewma.items())},
         }

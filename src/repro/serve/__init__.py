@@ -1,7 +1,8 @@
-"""Online serving subsystem: a compiled pipeline as a long-lived service.
+"""Online serving subsystem: compiled pipelines as a long-lived service.
 
-    from repro.serve import PipelineServer
-    server = PipelineServer(Retrieve("BM25") % 10, backend)
+    from repro.serve import PipelineServer, ServeConfig
+    cfg = ServeConfig.default(max_wait_ms=4.0).with_deadlines(250.0)
+    server = PipelineServer(Retrieve("BM25") % 10, backend, cfg)
     server.warmup(Q_sample)
     result = server.submit_wait(q_row)
     print(server.stats())
@@ -10,8 +11,11 @@
 heavier module and is intentionally not imported here.
 """
 from repro.serve.cache import StageResultCache, query_digest  # noqa: F401
-from repro.serve.request import (RequestTimeout, RequestTrace,  # noqa: F401
-                                 ServeRequest, ServerOverloaded)
+from repro.serve.config import ServeConfig  # noqa: F401
+from repro.serve.request import (DeadlineUnmeetable,  # noqa: F401
+                                 RequestTimeout, RequestTrace, ServeRequest,
+                                 ServerOverloaded)
 from repro.serve.scheduler import Batch, MicroBatchScheduler  # noqa: F401
-from repro.serve.server import PipelineServer  # noqa: F401
+from repro.serve.server import (MultiPipelineServer,  # noqa: F401
+                                PipelineServer)
 from repro.serve.trace import TraceLog, latency_summary  # noqa: F401

@@ -53,7 +53,17 @@ def _restamp_qid(part, qid_arr):
 
 
 class StageResultCache:
-    """(prefix digest, query digest) -> (Q row, R row) after that prefix."""
+    """(prefix digest, query digest) -> (Q row, R row, writer) after that
+    prefix.
+
+    One cache instance may back several pipelines (one multi-tenant
+    server, or several servers over a shared backend): two pipelines whose
+    leading stages carry identical structural keys chain to identical
+    prefix digests, so tenant B's request resumes from state tenant A
+    computed.  ``writer`` records which pipeline stored each entry — a hit
+    whose writer differs from the requester is a *cross-pipeline* prefix
+    hit, surfaced per tenant in ``server.stats()``.
+    """
 
     def __init__(self, maxsize: int | None = 4096):
         self.lru = LRU(maxsize)
@@ -63,14 +73,20 @@ class StageResultCache:
         #: chain, making 'hit rate' uninterpretable per request)
         self.hits = 0
         self.misses = 0
+        #: hits served from an entry a *different* pipeline wrote (the
+        #: online realisation of cross-pipeline prefix reuse)
+        self.cross_pipeline_hits = 0
 
     # -- lookup -------------------------------------------------------------
-    def lookup_deepest(self, prefix_digests, qdigest: str):
-        """Deepest cached prefix for this query: returns ``(depth, value)``
-        where ``depth`` stages are already computed (0 = nothing cached).
-        Scans deep-to-shallow so a full-pipeline hit wins outright."""
+    def lookup_deepest(self, prefix_digests, qdigest: str,
+                       reader: str = ""):
+        """Deepest cached prefix for this query: returns
+        ``(depth, (Q_row, R_row), writer)`` where ``depth`` stages are
+        already computed (0 = nothing cached, value/writer None).  Scans
+        deep-to-shallow so a full-pipeline hit wins outright.  ``reader``
+        names the requesting pipeline for cross-pipeline accounting."""
         if not self.enabled:
-            return 0, None
+            return 0, None, None
         for depth in range(len(prefix_digests), 0, -1):
             key = (prefix_digests[depth - 1], qdigest)
             if key not in self.lru:      # counter-free probe
@@ -78,13 +94,17 @@ class StageResultCache:
             val = self.lru.get(key)      # refreshes recency
             if val is not None:          # (may have raced an eviction)
                 self.hits += 1
-                return depth, val
+                Q_row, R_row, writer = val
+                if writer != reader:
+                    self.cross_pipeline_hits += 1
+                return depth, (Q_row, R_row), writer
         self.misses += 1
-        return 0, None
+        return 0, None, None
 
-    def store(self, prefix_digest: str, qdigest: str, Q_row, R_row) -> None:
+    def store(self, prefix_digest: str, qdigest: str, Q_row, R_row,
+              writer: str = "") -> None:
         if self.enabled:
-            self.lru.put((prefix_digest, qdigest), (Q_row, R_row))
+            self.lru.put((prefix_digest, qdigest), (Q_row, R_row, writer))
 
     # -- row plumbing (host-side numpy on purpose — see module docstring) ----
     @staticmethod
@@ -137,4 +157,5 @@ class StageResultCache:
         out = self.lru.info()
         out["hits"] = self.hits          # request-level, not per-depth
         out["misses"] = self.misses
+        out["cross_pipeline_hits"] = self.cross_pipeline_hits
         return out

@@ -1,0 +1,186 @@
+"""ServeConfig: the serving layer's frozen front-door configuration.
+
+``PipelineServer`` used to take ten loose constructor kwargs (``max_queue``,
+``max_wait_ms``, ``max_batch``, ``cache_entries``, ...); this module
+consolidates them into one frozen dataclass — the serving counterpart of
+the compiler's :class:`~repro.core.descriptor.BackendDescriptor` — so a
+deployment's serving policy is a single inspectable value that can be
+shared across servers, logged, and diffed:
+
+* **batching**     — micro-batch closure (``max_batch``, ``max_wait_ms``,
+                     arrival-rate-adaptive wait),
+* **admission**    — queue bound + deadline policy (default timeout,
+                     EDF shed-before-execute, service-time EWMA smoothing),
+* **lanes**        — weighted-fair-queueing priority lanes,
+* **caching**      — the stage-result cache bound and per-stage writes,
+* **tracing**      — per-stage timing and the trace-ring capacity.
+
+Construction mirrors the descriptor idiom: ``ServeConfig.default()`` plus
+chained ``with_*()`` builders returning new frozen values.  The legacy
+kwargs survive on ``PipelineServer`` as a ``DeprecationWarning`` shim
+(passing both a config and legacy kwargs is a ``TypeError``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: legacy PipelineServer kwarg -> ServeConfig field (the deprecation shim's
+#: translation table; also what the TypeError names on a mixed call)
+LEGACY_KWARGS = {
+    "optimize": "optimize",
+    "max_queue": "max_queue",
+    "max_wait_ms": "max_wait_ms",
+    "max_batch": "max_batch",
+    "cache_entries": "cache_entries",
+    "cache_stages": "cache_stages",
+    "default_timeout_ms": "default_timeout_ms",
+    "trace_stages": "trace_stages",
+    "trace_capacity": "trace_capacity",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Frozen serving policy for a :class:`~repro.serve.server.PipelineServer`.
+
+    ``lanes`` is a tuple of ``(name, weight)`` pairs — the scheduler serves
+    lanes in weighted-fair order so a low-weight background tenant cannot
+    starve interactive traffic; ``default_lane`` is where ``submit`` routes
+    when the caller names none.  ``shed`` enables shed-before-execute: a
+    request whose deadline cannot survive the estimated queue wait plus one
+    batch service time (an EWMA with ``service_ewma_alpha``) is rejected at
+    submit / dropped at batch close *before* it occupies a ladder slot.
+    ``adaptive_wait`` shrinks the batch-close wait below ``max_wait_ms``
+    when the observed arrival rate says the batch cannot fill in time.
+    """
+
+    # -- compilation --------------------------------------------------------
+    optimize: bool = True
+    # -- admission / queue --------------------------------------------------
+    max_queue: int = 1024
+    default_timeout_ms: float | None = None
+    # -- batching -----------------------------------------------------------
+    max_wait_ms: float = 5.0
+    max_batch: int | None = None
+    adaptive_wait: bool = False
+    # -- deadline policy ----------------------------------------------------
+    shed: bool = True
+    service_ewma_alpha: float = 0.2
+    # -- priority lanes (WFQ) -----------------------------------------------
+    lanes: tuple = (("default", 1.0),)
+    default_lane: str = "default"
+    # -- stage-result cache -------------------------------------------------
+    cache_entries: int | None = 4096
+    cache_stages: bool = True
+    # -- tracing ------------------------------------------------------------
+    trace_stages: bool = False
+    trace_capacity: int = 2048
+
+    def __post_init__(self):
+        if not self.lanes:
+            raise ValueError("ServeConfig.lanes must name at least one lane")
+        names = [n for n, _ in self.lanes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate lane names in {names}")
+        if any(w <= 0 for _, w in self.lanes):
+            raise ValueError("lane weights must be positive")
+        if self.default_lane not in names:
+            raise ValueError(f"default_lane {self.default_lane!r} not in "
+                             f"lanes {names}")
+        if not 0.0 < self.service_ewma_alpha <= 1.0:
+            raise ValueError("service_ewma_alpha must be in (0, 1]")
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def default(cls, **overrides) -> "ServeConfig":
+        return cls(**overrides)
+
+    def replace(self, **changes) -> "ServeConfig":
+        return dataclasses.replace(self, **changes)
+
+    def with_batching(self, *, max_batch: int | None = ...,
+                      max_wait_ms: float | None = None,
+                      adaptive_wait: bool | None = None) -> "ServeConfig":
+        kw: dict = {}
+        if max_batch is not ...:
+            kw["max_batch"] = max_batch
+        if max_wait_ms is not None:
+            kw["max_wait_ms"] = float(max_wait_ms)
+        if adaptive_wait is not None:
+            kw["adaptive_wait"] = bool(adaptive_wait)
+        return self.replace(**kw)
+
+    def with_queue(self, max_queue: int) -> "ServeConfig":
+        return self.replace(max_queue=int(max_queue))
+
+    def with_deadlines(self, default_timeout_ms: float | None = ...,
+                       *, shed: bool | None = None,
+                       service_ewma_alpha: float | None = None
+                       ) -> "ServeConfig":
+        kw: dict = {}
+        if default_timeout_ms is not ...:
+            kw["default_timeout_ms"] = default_timeout_ms
+        if shed is not None:
+            kw["shed"] = bool(shed)
+        if service_ewma_alpha is not None:
+            kw["service_ewma_alpha"] = float(service_ewma_alpha)
+        return self.replace(**kw)
+
+    def with_lanes(self, *lanes, default: str | None = None) -> "ServeConfig":
+        """Lanes as ``(name, weight)`` pairs; the default lane is ``default``
+        (or the first lane)."""
+        spec = tuple((str(n), float(w)) for n, w in lanes)
+        return self.replace(lanes=spec,
+                            default_lane=default if default is not None
+                            else spec[0][0])
+
+    def with_cache(self, entries: int | None = ...,
+                   *, cache_stages: bool | None = None) -> "ServeConfig":
+        kw: dict = {}
+        if entries is not ...:
+            kw["cache_entries"] = entries
+        if cache_stages is not None:
+            kw["cache_stages"] = bool(cache_stages)
+        return self.replace(**kw)
+
+    def with_tracing(self, stages: bool | None = None,
+                     *, capacity: int | None = None) -> "ServeConfig":
+        kw: dict = {}
+        if stages is not None:
+            kw["trace_stages"] = bool(stages)
+        if capacity is not None:
+            kw["trace_capacity"] = int(capacity)
+        return self.replace(**kw)
+
+    # -- queries ------------------------------------------------------------
+    def lane_weights(self) -> dict[str, float]:
+        return {n: float(w) for n, w in self.lanes}
+
+    def as_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["lanes"] = [list(p) for p in self.lanes]
+        return out
+
+
+def config_from_legacy_kwargs(config: "ServeConfig | None",
+                              legacy: dict) -> "ServeConfig":
+    """Resolve the (config, legacy kwargs) pair a PipelineServer call
+    presented: legacy kwargs alone build a config with a
+    ``DeprecationWarning``; both at once is a ``TypeError`` (two sources of
+    truth); neither is the default config."""
+    unknown = sorted(set(legacy) - set(LEGACY_KWARGS))
+    if unknown:
+        raise TypeError(f"unknown PipelineServer kwargs: {unknown}")
+    if legacy and config is not None:
+        raise TypeError(
+            f"PipelineServer got both config=ServeConfig(...) and legacy "
+            f"kwargs {sorted(legacy)}; fold them into the config "
+            f"(ServeConfig.with_* builders)")
+    if legacy:
+        import warnings
+        warnings.warn(
+            f"PipelineServer({', '.join(sorted(legacy))}=...) kwargs are "
+            f"deprecated; pass config=ServeConfig.default(...) instead",
+            DeprecationWarning, stacklevel=3)
+        return ServeConfig(**{LEGACY_KWARGS[k]: v for k, v in legacy.items()})
+    return config if config is not None else ServeConfig()

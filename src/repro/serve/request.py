@@ -20,6 +20,14 @@ class ServerOverloaded(RuntimeError):
     server growing an unbounded backlog."""
 
 
+class DeadlineUnmeetable(ServerOverloaded):
+    """Shed at the door: the scheduler's service-time model says this
+    request's deadline cannot survive the estimated queue wait plus one
+    batch service time, so admitting it would only burn a ladder slot on
+    an answer nobody will accept.  Subclasses :class:`ServerOverloaded`
+    because the remedy is the same — the caller sheds load."""
+
+
 class RequestTimeout(TimeoutError):
     """The request's deadline expired before the server produced a result
     (the scheduler drops expired requests instead of wasting a batch slot
@@ -43,8 +51,12 @@ class RequestTrace:
     chain_len: int = 0
     batch_reason: str = ""          # "full" | "deadline" | "drain"
     timed_out: bool = False
+    shed: bool = False              # dropped pre-execution by the scheduler
     errored: bool = False           # execution raised; see request.error
     late: bool = False              # completed, but past its deadline
+    lane: str = ""                  # WFQ lane it was served from
+    tenant: str = ""                # pipeline (tenant) it executed under
+    cross_prefix_hit: bool = False  # cache hit written by another pipeline
     stage_ms: tuple = ()            # ((stage label, ms), ...) of its batch
 
     def as_dict(self) -> dict:
@@ -62,6 +74,8 @@ class ServeRequest:
     trace: RequestTrace
     t_enqueued: float = 0.0         # set by the scheduler on admission
     qdigest: str = ""               # content digest of terms/weights
+    lane: str = "default"           # WFQ lane this request queues in
+    tenant: str = "default"         # which of the server's pipelines runs it
     result: Any = None
     error: BaseException | None = None
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
@@ -86,6 +100,10 @@ class ServeRequest:
         if self.error is not None:
             raise self.error
         if self.trace.timed_out:
-            raise RequestTimeout(f"request {self.rid} expired in queue "
-                                 f"(deadline passed before execution)")
+            raise RequestTimeout(
+                f"request {self.rid} "
+                + ("shed pre-execution (deadline cannot survive the "
+                   "estimated queue wait + one batch service time)"
+                   if self.trace.shed else
+                   "expired in queue (deadline passed before execution)"))
         return self.result

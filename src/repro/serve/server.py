@@ -1,32 +1,44 @@
-"""PipelineServer: a compiled pipeline as a long-lived online service.
+"""PipelineServer: compiled pipelines as a long-lived online service.
 
 The offline stack executes a *batch* of queries through a compiled
 pipeline; serving inverts the shape: queries arrive one at a time and the
 server re-creates the batch axis continuously —
 
-    submit() -> bounded queue -> micro-batch scheduler -> bucket ladder
-             -> stage-keyed result cache -> per-stage execution -> result
+    submit() -> bounded queue -> deadline-aware micro-batch scheduler
+             -> bucket ladder -> stage-keyed result cache
+             -> per-stage execution -> result
 
-* The pipeline is compiled ONCE (pass manager, fusion gate) at server
-  construction; serving executes the compiled IR chain, so steady-state
+* Each pipeline is compiled ONCE (pass manager, fusion gate) when it is
+  attached; serving executes the compiled IR chains, so steady-state
   traffic never touches the compiler.
 * Micro-batches pack into the engine's existing bucket ladder and reuse
-  its persistent jit cache: after :meth:`warmup` every (stage, bucket)
-  variant is compiled and serving never recompiles.
-* A :class:`~repro.serve.cache.StageResultCache` keyed by the planner's
-  chained stage digests lets repeated queries skip whole pipeline
-  prefixes (the online mirror of the experiment-plan trie).
-* Admission control (bounded queue), per-request deadlines (expired
-  requests are dropped, not executed), and structured per-request traces
-  surfaced via :meth:`stats`.
+  its persistent jit cache: after :meth:`warmup` every
+  (pipeline stage, bucket) variant is compiled and serving never
+  recompiles.
+* **Multi-tenancy**: :meth:`add_pipeline` multiplexes several compiled
+  pipelines over ONE engine, ONE scheduler, and ONE shared
+  :class:`~repro.serve.cache.StageResultCache`.  Pipelines sharing a
+  structural prefix share cache entries (the chained prefix digests make
+  that sound), so tenant B resumes from state tenant A computed —
+  cross-pipeline hits are surfaced per tenant in :meth:`stats`.
+* **Deadline awareness**: the scheduler packs batches EDF, sheds requests
+  whose deadline its service-time EWMA says cannot be met *before* they
+  occupy a ladder slot, and serves priority lanes by weighted fair
+  queueing.  The server feeds measured batch service times back to the
+  scheduler (and the engine) after every executed batch.
+* Policy lives in one frozen :class:`~repro.serve.config.ServeConfig`
+  (the legacy loose kwargs survive as a ``DeprecationWarning`` shim).
 
 The server owns no thread until :meth:`start`; tests and replay drive it
 synchronously with :meth:`pump`.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+import warnings
+from typing import Any
 
 import jax
 import numpy as np
@@ -36,6 +48,7 @@ from repro.core.compiler import Context, _execute
 from repro.core.passes import compile_pipeline
 from repro.core.plan import chain_prefix_digests
 from repro.serve.cache import StageResultCache, query_digest
+from repro.serve.config import ServeConfig, config_from_legacy_kwargs
 from repro.serve.request import RequestTrace, ServeRequest
 from repro.serve.scheduler import MicroBatchScheduler
 from repro.serve.trace import TraceLog
@@ -50,65 +63,144 @@ _FALLBACK_LADDER = (1, 2, 4, 8, 16)
 _UNSET = object()
 
 
-class PipelineServer:
-    """Serve single queries (or small bursts) through a compiled pipeline.
+@dataclasses.dataclass
+class _Tenant:
+    """One served pipeline: its compiled chain plus cache-key material."""
+    name: str
+    op: Any                       # compiled IR root
+    chain: list                   # ir.chain(op)
+    stateful: bool                # any stage with a version marker?
+    prefixes: list                # chained stage digests (shared scope)
+    compile_report: dict
 
-    >>> server = PipelineServer(Retrieve("BM25") % 10, backend)
+
+class _CompatRequestList(list):
+    """``submit`` used to return a bare :class:`ServeRequest` for nq==1 and
+    a list otherwise; it now always returns a list.  For one release the
+    nq==1 result is this shim — a real list that also forwards request
+    attributes (``.wait``, ``.done``, ``.trace``, ...) to its single
+    element with a :class:`DeprecationWarning` so legacy callers keep
+    working while they migrate to ``submit_one``."""
+
+    def __getattr__(self, name):
+        warnings.warn(
+            "PipelineServer.submit() now always returns a list of "
+            "ServeRequest; use submit_one() for the single-request API",
+            DeprecationWarning, stacklevel=2)
+        return getattr(self[0], name)
+
+
+class PipelineServer:
+    """Serve single queries (or small bursts) through compiled pipelines.
+
+    >>> cfg = ServeConfig.default(max_wait_ms=4.0).with_deadlines(250.0)
+    >>> server = PipelineServer(Retrieve("BM25") % 10, backend, cfg)
+    >>> server.add_pipeline(other_pipe, name="background")
     >>> server.warmup(Q_sample)
-    >>> req = server.submit(q_row)      # non-blocking
+    >>> req = server.submit_one(q_row)  # non-blocking
     >>> server.pump()                   # or server.start() for a thread
     >>> R = req.wait(timeout=5.0)
     """
 
-    def __init__(self, pipeline, backend, *, optimize: bool = True,
-                 max_queue: int = 1024, max_wait_ms: float = 5.0,
-                 max_batch: int | None = None,
-                 cache_entries: int | None = 4096,
-                 cache_stages: bool = True,
-                 default_timeout_ms: float | None = None,
-                 trace_stages: bool = False,
-                 trace_capacity: int = 2048,
-                 cache: StageResultCache | None = None):
+    def __init__(self, pipeline, backend, config: ServeConfig | None = None,
+                 *, cache: StageResultCache | None = None,
+                 name: str = "default", **legacy):
+        self.config = config_from_legacy_kwargs(config, legacy)
         self.backend = backend
         self.engine = backend.engine
-        #: compile report: pass timings, gate decisions and tuning counters
-        #: (``compile_report['tuning']['profile_hits']`` > 0 with zero
-        #: gate_estimates/probe_measurements = a profile-warm restart)
-        self.compile_report: dict = {}
-        self.op = compile_pipeline(pipeline, backend, optimize=optimize,
-                                   report=self.compile_report)
-        self.chain = ir.chain(self.op)
-        self._stateful = self.op.stateful_subtree()
         self._digest_scope = f"serve:be{backend.uid}:"
-        self._prefixes = chain_prefix_digests(self.chain,
-                                              scope=self._digest_scope)
+        self._tenants: dict[str, _Tenant] = {}
+        self._default_tenant = name
         ladder = (self.engine.ladder if self.engine is not None
                   else _FALLBACK_LADDER)
+        cfg = self.config
         self.scheduler = MicroBatchScheduler(
-            ladder=ladder, max_queue=max_queue, max_wait_ms=max_wait_ms,
-            max_batch=max_batch)
+            ladder=ladder, max_queue=cfg.max_queue,
+            max_wait_ms=cfg.max_wait_ms, max_batch=cfg.max_batch,
+            lanes=cfg.lanes, default_lane=cfg.default_lane,
+            adaptive_wait=cfg.adaptive_wait, shed=cfg.shed,
+            service_ewma_alpha=cfg.service_ewma_alpha)
         self.cache = cache if cache is not None \
-            else StageResultCache(cache_entries)
-        self.cache_stages = cache_stages
-        self.default_timeout_ms = default_timeout_ms
-        self.trace_stages = trace_stages
-        self.log = TraceLog(trace_capacity)
+            else StageResultCache(cfg.cache_entries)
+        self.cache_stages = cfg.cache_stages
+        self.default_timeout_ms = cfg.default_timeout_ms
+        self.trace_stages = cfg.trace_stages
+        self.log = TraceLog(cfg.trace_capacity)
         self._rid = 0
         self._rid_lock = threading.Lock()
         self._warm_compiles: int | None = None
         self._thread: threading.Thread | None = None
         self._stop = False
         self.last_error: BaseException | None = None
+        self.add_pipeline(pipeline, name=name)
+
+    # -- tenancy ------------------------------------------------------------
+    def add_pipeline(self, pipeline, *, name: str | None = None,
+                     optimize: bool | None = None) -> str:
+        """Attach another pipeline to this server (compiled now, once).
+        All pipelines share the engine, the scheduler, and the stage cache
+        — identical structural prefixes share cache entries across
+        tenants.  Returns the tenant name (``submit(..., pipeline=name)``
+        routes to it).  Call :meth:`warmup` again after attaching so the
+        new chain's (stage, bucket) variants are compiled before traffic
+        hits them."""
+        if name is None:
+            name = f"pipe{len(self._tenants)}"
+        if name in self._tenants:
+            raise ValueError(f"pipeline name {name!r} already attached "
+                             f"(attached: {sorted(self._tenants)})")
+        report: dict = {}
+        op = compile_pipeline(
+            pipeline, self.backend,
+            optimize=self.config.optimize if optimize is None else optimize,
+            report=report)
+        chain = ir.chain(op)
+        self._tenants[name] = _Tenant(
+            name=name, op=op, chain=chain,
+            stateful=op.stateful_subtree(),
+            prefixes=chain_prefix_digests(chain, scope=self._digest_scope),
+            compile_report=report)
+        self.log.register_tenant(name)
+        self._warm_compiles = None      # new chain: warm-up snapshot stale
+        return name
+
+    def pipelines(self) -> list[str]:
+        return list(self._tenants)
+
+    def _tenant(self, name: str | None) -> _Tenant:
+        if name is None:
+            name = self._default_tenant
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(f"unknown pipeline {name!r}; attached: "
+                           f"{sorted(self._tenants)}") from None
+
+    # back-compat accessors: the default tenant's compiled pipeline
+    @property
+    def op(self):
+        return self._tenant(None).op
+
+    @property
+    def chain(self):
+        return self._tenant(None).chain
+
+    @property
+    def compile_report(self) -> dict:
+        """Compile report of the default pipeline: pass timings, gate
+        decisions, tuning counters (``['tuning']['profile_hits']`` > 0 with
+        zero gate_estimates/probe_measurements = a profile-warm restart)."""
+        return self._tenant(None).compile_report
 
     # -- key management -----------------------------------------------------
-    def _prefix_digests(self) -> list[str]:
+    def _prefix_digests(self, tenant: _Tenant) -> list:
         """Chained stage digests; recomputed per batch when the chain holds
         a stateful stage (fit() bumps its version marker — the recompute is
         what invalidates the online cache)."""
-        if self._stateful:
-            self._prefixes = chain_prefix_digests(self.chain,
-                                                  scope=self._digest_scope)
-        return self._prefixes
+        if tenant.stateful:
+            tenant.prefixes = chain_prefix_digests(tenant.chain,
+                                                   scope=self._digest_scope)
+        return tenant.prefixes
 
     # -- submission ---------------------------------------------------------
     def _next_rid(self) -> int:
@@ -116,13 +208,9 @@ class PipelineServer:
             self._rid += 1
             return self._rid
 
-    def submit(self, Q, *, timeout_ms=_UNSET):
-        """Enqueue the queries in ``Q`` (an nq>=1 Q relation).  Returns one
-        :class:`ServeRequest` for nq==1, else a list.  Raises
-        :class:`~repro.serve.request.ServerOverloaded` when admission
-        control rejects (bounded queue full).  ``timeout_ms`` omitted =
-        inherit the server's ``default_timeout_ms``; an explicit ``None``
-        = this request has no deadline."""
+    def _make_requests(self, Q, timeout_ms, lane, pipeline) -> list:
+        tenant = self._tenant(pipeline)
+        lane = self.config.default_lane if lane is None else lane
         nq = int(np.asarray(Q["qid"]).shape[0])
         if nq <= 0:
             raise ValueError("empty query batch")
@@ -134,34 +222,70 @@ class PipelineServer:
         for j in range(nq):
             row = StageResultCache.row(Q, j)
             rid = self._next_rid()
-            req = ServeRequest(rid=rid, Q=row, deadline=deadline,
-                               trace=RequestTrace(rid=rid, t_arrival=now,
-                                                  chain_len=len(self.chain)))
+            req = ServeRequest(
+                rid=rid, Q=row, deadline=deadline, lane=lane,
+                tenant=tenant.name,
+                trace=RequestTrace(rid=rid, t_arrival=now,
+                                   chain_len=len(tenant.chain),
+                                   lane=lane, tenant=tenant.name))
             req.qdigest = query_digest(row)
             reqs.append(req)
         # atomic: a burst admits whole or not at all (partial admission
         # would execute requests the caller holds no handles to)
         self.scheduler.submit_many(reqs)
-        return reqs[0] if nq == 1 else reqs
+        return reqs
 
-    def submit_wait(self, Q, *, timeout: float = 60.0):
-        """Synchronous convenience: submit + pump + wait."""
-        req = self.submit(Q)
+    def submit_one(self, Q, *, timeout_ms=_UNSET, lane: str | None = None,
+                   pipeline: str | None = None) -> ServeRequest:
+        """Enqueue exactly one query (an nq==1 Q relation) and return its
+        :class:`ServeRequest`.  ``timeout_ms`` omitted = inherit the
+        server's ``default_timeout_ms``; an explicit ``None`` = no
+        deadline.  ``lane`` routes into a WFQ priority lane; ``pipeline``
+        names the tenant (default: the constructor pipeline).  Raises
+        :class:`~repro.serve.request.ServerOverloaded` when admission
+        control rejects, and its subclass
+        :class:`~repro.serve.request.DeadlineUnmeetable` when
+        shed-before-execute rejects the deadline at the door."""
+        nq = int(np.asarray(Q["qid"]).shape[0])
+        if nq != 1:
+            raise ValueError(f"submit_one takes exactly one query row, got "
+                             f"nq={nq}; use submit() for bursts")
+        return self._make_requests(Q, timeout_ms, lane, pipeline)[0]
+
+    def submit(self, Q, *, timeout_ms=_UNSET, lane: str | None = None,
+               pipeline: str | None = None) -> list:
+        """Enqueue the queries in ``Q`` (an nq>=1 Q relation).  Always
+        returns a list of :class:`ServeRequest` — one per row.  (For one
+        release the nq==1 result still forwards request attributes with a
+        ``DeprecationWarning``; new code uses :meth:`submit_one`.)  See
+        :meth:`submit_one` for ``timeout_ms`` / ``lane`` / ``pipeline``
+        semantics and the overload exceptions."""
+        reqs = self._make_requests(Q, timeout_ms, lane, pipeline)
+        return _CompatRequestList(reqs) if len(reqs) == 1 else reqs
+
+    def submit_wait(self, Q, *, timeout: float = 60.0, timeout_ms=_UNSET,
+                    lane: str | None = None, pipeline: str | None = None):
+        """Synchronous convenience: submit + pump + wait.  ``timeout_ms``
+        is the per-request deadline (forwarded to :meth:`submit`, so the
+        synchronous path can express deadlines too); ``timeout`` bounds
+        the local wait for results.  Returns one result for an nq==1
+        submission, else a list of results."""
+        reqs = self._make_requests(Q, timeout_ms, lane, pipeline)
         self.pump()
-        one = not isinstance(req, list)
-        return req.wait(timeout) if one else [r.wait(timeout) for r in req]
+        outs = [r.wait(timeout) for r in reqs]
+        return outs[0] if len(outs) == 1 else outs
 
     # -- serving loop -------------------------------------------------------
     def step(self, *, block: bool = False, timeout: float | None = None,
              drain: bool = False) -> int:
         """Close and execute at most one micro-batch; returns the number of
-        requests it completed (0 = no batch closed)."""
+        requests it retired (served + shed; 0 = no batch closed)."""
         batch = self.scheduler.next_batch(block=block, timeout=timeout,
                                           drain=drain)
         if batch is None:
             return 0
         self._execute_batch(batch)
-        return len(batch.requests)
+        return len(batch.requests) + len(batch.shed)
 
     def pump(self) -> int:
         """Drain the queue synchronously (replay/test mode)."""
@@ -197,25 +321,29 @@ class PipelineServer:
 
     # -- warm-up ------------------------------------------------------------
     def warmup(self, Q_sample) -> dict:
-        """Compile every (stage, bucket) jit variant by replaying a sample
-        query at each ladder rung, then snapshot the engine's compile
-        counter: ``stats()['recompiles_since_warmup']`` must stay 0 in
-        steady state.  Cache writes are skipped (the tiled duplicates would
-        only pollute the LRU)."""
+        """Compile every (pipeline stage, bucket) jit variant by replaying a
+        sample query at each ladder rung through every attached pipeline,
+        then snapshot the engine's compile counter:
+        ``stats()['recompiles_since_warmup']`` must stay 0 in steady
+        state.  Cache writes are skipped (the tiled duplicates would only
+        pollute the LRU)."""
         row = StageResultCache.row(Q_sample, 0)
         t0 = time.monotonic()
-        for bucket in self.scheduler.ladder:
-            Qb = jax.tree.map(
-                lambda x: np.tile(x, (bucket,) + (1,) * (x.ndim - 1)), row)
-            ctx = Context(self.backend)
-            Q, R, tok = Qb, None, None
-            for stage in self.chain:
-                Q, R, tok = _execute(stage, ctx, Q, R, tok)
-            jax.block_until_ready((Q, R))
+        for tenant in self._tenants.values():
+            for bucket in self.scheduler.ladder:
+                Qb = jax.tree.map(
+                    lambda x: np.tile(x, (bucket,) + (1,) * (x.ndim - 1)),
+                    row)
+                ctx = Context(self.backend)
+                Q, R, tok = Qb, None, None
+                for stage in tenant.chain:
+                    Q, R, tok = _execute(stage, ctx, Q, R, tok)
+                jax.block_until_ready((Q, R))
         if self.engine is not None:
             self._warm_compiles = self.engine.total_compiles()
         out = {"warmup_s": round(time.monotonic() - t0, 3),
                "buckets": list(self.scheduler.ladder),
+               "pipelines": list(self._tenants),
                "compiles": (None if self.engine is None
                             else self.engine.total_compiles())}
         # persist any autotune decisions taken at compile time, so the next
@@ -231,42 +359,66 @@ class PipelineServer:
     # -- batch execution ----------------------------------------------------
     def _execute_batch(self, batch) -> None:
         now = batch.t_closed
+        for req in batch.shed:          # shed pre-execution by the scheduler
+            req.trace.t_scheduled = now
+            req.trace.queue_wait_ms = 1000.0 * (now - req.t_enqueued)
+            req.trace.batch_reason = batch.reason
+            self._finish(req, None, timed_out=True)
         live = []
         for req in batch.requests:
             req.trace.t_scheduled = now
             req.trace.queue_wait_ms = 1000.0 * (now - req.t_enqueued)
             req.trace.batch_size = len(batch.requests)
             req.trace.batch_reason = batch.reason
-            if req.expired(now):
+            if req.expired(now):        # expired while queued (no EWMA yet)
                 self._finish(req, None, timed_out=True)
             else:
                 live.append(req)
         if not live:
             return
         self.log.record_batch(len(live))
-        prefixes = self._prefix_digests()
-        # deepest cached prefix per request, then group by resume depth so
-        # each group executes its remaining suffix as one micro-batch
-        groups: dict[int, list] = {}
+        t_exec0 = time.monotonic()
+        # deepest cached prefix per request, then group by (tenant, resume
+        # depth) so each group executes its remaining suffix as one
+        # micro-batch of its own pipeline
+        groups: dict[tuple, list] = {}
         cached: dict[int, tuple] = {}
+        max_bucket = 0
         for req in live:
-            depth, val = self.cache.lookup_deepest(prefixes, req.qdigest)
+            tenant = self._tenants[req.tenant]
+            depth, val, writer = self.cache.lookup_deepest(
+                self._prefix_digests(tenant), req.qdigest,
+                reader=tenant.name)
             req.trace.cache_hit_depth = depth
+            req.trace.cross_prefix_hit = (depth > 0 and writer is not None
+                                          and writer != tenant.name)
             cached[req.rid] = val
-            groups.setdefault(depth, []).append(req)
-        for depth in sorted(groups, reverse=True):
+            groups.setdefault((req.tenant, depth), []).append(req)
+        for tname, depth in sorted(groups, key=lambda g: (g[0], -g[1])):
+            grp = groups[(tname, depth)]
             try:
-                self._run_group(groups[depth], depth,
-                                [cached[r.rid] for r in groups[depth]],
-                                prefixes)
+                bucket = self._run_group(self._tenants[tname], grp, depth,
+                                         [cached[r.rid] for r in grp])
+                max_bucket = max(max_bucket, bucket)
             except BaseException as e:
                 self.last_error = e
-                for req in groups[depth]:
+                for req in grp:
                     req.error = e
                     self._finish(req, None)
+        # service-time feedback: the per-bucket/per-slot EWMAs of these are
+        # the scheduler's S in every shed decision and its deadline cap on
+        # batch packing; the engine keeps its own per-bucket view
+        dt = time.monotonic() - t_exec0
+        self.scheduler.note_service_time(dt, len(live))
+        if self.engine is not None and max_bucket:
+            self.engine.note_service_time(max_bucket, dt)
 
-    def _run_group(self, reqs, depth: int, cached_vals, prefixes) -> None:
-        L = len(self.chain)
+    def _run_group(self, tenant: _Tenant, reqs, depth: int,
+                   cached_vals) -> int:
+        """Execute one (tenant, resume-depth) group as a padded micro-batch;
+        returns the ladder bucket it padded to (0 = pure cache replay)."""
+        chain, prefixes = tenant.chain, self._prefix_digests(tenant)
+        L = len(chain)
         qids = [r.qid for r in reqs]
         if depth >= L:                       # full-pipeline cache hits
             for req, (Qc, Rc) in zip(reqs, cached_vals):
@@ -275,7 +427,7 @@ class PipelineServer:
                 # live cache entry (same invariant as the miss path)
                 self._finish(req, StageResultCache.row(
                     Rr if Rr is not None else Qr, 0))
-            return
+            return 0
         if depth == 0:
             Q = StageResultCache.stack_rows([r.Q for r in reqs])
             R = None
@@ -300,7 +452,7 @@ class PipelineServer:
         tok = ctx.source_token(Q, R)
         stage_times = []
         for i in range(depth, L):
-            stage = self.chain[i]
+            stage = chain[i]
             t0 = time.monotonic() if self.trace_stages else 0.0
             Q, R, tok = _execute(stage, ctx, Q, R, tok)
             if self.trace_stages:
@@ -319,7 +471,8 @@ class PipelineServer:
                     self.cache.store(prefixes[i], req.qdigest,
                                      StageResultCache.row(Qh, j),
                                      None if Rh is None
-                                     else StageResultCache.row(Rh, j))
+                                     else StageResultCache.row(Rh, j),
+                                     writer=tenant.name)
         jax.block_until_ready((Q, R))
         Qh = StageResultCache.to_host(Q)
         Rh = None if R is None else StageResultCache.to_host(R)
@@ -330,8 +483,10 @@ class PipelineServer:
                 self.cache.store(
                     prefixes[L - 1], req.qdigest,
                     StageResultCache.row(Qh, j),
-                    None if Rh is None else StageResultCache.row(Rh, j))
+                    None if Rh is None else StageResultCache.row(Rh, j),
+                    writer=tenant.name)
             self._finish(req, StageResultCache.row(result, j))
+        return bucket
 
     def _finish(self, req, result, *, timed_out: bool = False) -> None:
         t = time.monotonic()
@@ -349,13 +504,18 @@ class PipelineServer:
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:
+        default = self._tenant(None)
+        # NOTE: log.summary() supplies "pipelines" — the per-tenant counter
+        # dict, keyed by every attached pipeline name
         out = {
-            "pipeline": self.op.label(),
-            "chain_len": len(self.chain),
+            "pipeline": default.op.label(),
+            "chain_len": len(default.chain),
+            "config": self.config.as_dict(),
             "scheduler": self.scheduler.stats(),
             **self.log.summary(),
             "stage_cache": self.cache.info(),
         }
+        out["cross_pipeline_hits"] = self.cache.cross_pipeline_hits
         if self.engine is not None:
             out["engine"] = self.engine.stats()
             total = self.engine.total_compiles()
@@ -365,9 +525,39 @@ class PipelineServer:
         else:
             out["engine"] = None
             out["recompiles_since_warmup"] = None
-        out["tuning"] = self.compile_report.get("tuning")
+        out["tuning"] = default.compile_report.get("tuning")
         desc = getattr(self.backend, "descriptor", None)
         out["tuning_profile"] = (desc.profile.info()
                                  if desc is not None and desc.profile
                                  else None)
         return out
+
+
+class MultiPipelineServer(PipelineServer):
+    """Several named pipelines multiplexed over one engine, one scheduler,
+    and one shared stage cache from construction:
+
+    >>> server = MultiPipelineServer(
+    ...     {"interactive": bm25 >> rerank % 10, "batch": bm25 % 100},
+    ...     backend, ServeConfig.default().with_lanes(
+    ...         ("interactive", 4.0), ("background", 1.0)))
+    >>> server.warmup(Q)
+    >>> server.submit_one(row, pipeline="batch", lane="background")
+
+    The first entry is the default tenant (``submit`` with no ``pipeline=``
+    routes there).  Equivalent to ``PipelineServer`` + ``add_pipeline``
+    per extra entry.
+    """
+
+    def __init__(self, pipelines: dict, backend,
+                 config: ServeConfig | None = None, *,
+                 cache: StageResultCache | None = None, **legacy):
+        if not pipelines:
+            raise ValueError("MultiPipelineServer needs at least one "
+                             "pipeline")
+        items = list(pipelines.items())
+        first_name, first = items[0]
+        super().__init__(first, backend, config, cache=cache,
+                         name=first_name, **legacy)
+        for tname, pipe in items[1:]:
+            self.add_pipeline(pipe, name=tname)

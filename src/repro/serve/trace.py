@@ -50,6 +50,7 @@ class TraceLog:
         self.ring: deque = deque(maxlen=capacity)
         self.n_served = 0
         self.n_timed_out = 0
+        self.n_shed = 0
         self.n_errors = 0
         self.n_late = 0
         self.n_batches = 0
@@ -59,6 +60,11 @@ class TraceLog:
         self.hit_depths: dict[int, int] = {}
         #: stage label -> [sum_ms, count]
         self.stage_ms: dict[str, list] = {}
+        #: tenant (pipeline) name -> per-pipeline counters; populated even
+        #: for a single-pipeline server (one "default" entry)
+        self.tenants: dict[str, dict] = {}
+        #: WFQ lane -> completed-request count
+        self.lane_served: dict[str, int] = {}
 
     # -- recording ----------------------------------------------------------
     def record_batch(self, size: int) -> None:
@@ -73,20 +79,50 @@ class TraceLog:
             ent[0] += ms
             ent[1] += 1
 
+    def register_tenant(self, name: str) -> None:
+        """Pre-create a pipeline's counter entry so ``summary()`` lists
+        every attached tenant, traffic or not."""
+        with self._lock:
+            self._tenant(name)
+
+    def _tenant(self, name: str) -> dict:
+        ent = self.tenants.get(name)
+        if ent is None:
+            ent = self.tenants[name] = {
+                "served": 0, "timed_out": 0, "shed": 0, "errors": 0,
+                "late": 0, "cache_hit_depths": {},
+                "cross_pipeline_prefix_hits": 0}
+        return ent
+
     def record(self, trace) -> None:
         with self._lock:
             self.ring.append(trace)
+            ten = self._tenant(trace.tenant or "default")
             if trace.timed_out:
                 self.n_timed_out += 1
+                ten["timed_out"] += 1
+                if trace.shed:
+                    self.n_shed += 1
+                    ten["shed"] += 1
                 return
             if trace.errored:
                 self.n_errors += 1
+                ten["errors"] += 1
                 return
             self.n_served += 1
+            ten["served"] += 1
+            if trace.lane:
+                self.lane_served[trace.lane] = \
+                    self.lane_served.get(trace.lane, 0) + 1
             if trace.late:
                 self.n_late += 1
+                ten["late"] += 1
             d = trace.cache_hit_depth
             self.hit_depths[d] = self.hit_depths.get(d, 0) + 1
+            hd = ten["cache_hit_depths"]
+            hd[d] = hd.get(d, 0) + 1
+            if trace.cross_prefix_hit:
+                ten["cross_pipeline_prefix_hits"] += 1
 
     # -- reporting ----------------------------------------------------------
     def summary(self) -> dict:
@@ -96,6 +132,7 @@ class TraceLog:
             out = {
                 "served": self.n_served,
                 "timed_out": self.n_timed_out,
+                "shed": self.n_shed,
                 "errors": self.n_errors,
                 "late": self.n_late,
                 "batches": self.n_batches,
@@ -104,6 +141,11 @@ class TraceLog:
                     if self.n_batches else 0.0),
                 "max_batch_size": self.max_batch_size,
                 "cache_hit_depths": dict(sorted(self.hit_depths.items())),
+                "lane_served": dict(sorted(self.lane_served.items())),
+                "pipelines": {
+                    name: {**ent, "cache_hit_depths":
+                           dict(sorted(ent["cache_hit_depths"].items()))}
+                    for name, ent in sorted(self.tenants.items())},
             }
             if self.stage_ms:
                 out["stage_mean_ms"] = {

@@ -11,8 +11,8 @@ from repro.core import (DenseRerank, ExperimentPlan, Extract, JaxBackend,
 from repro.core.compiler import Context
 from repro.core.data import make_queries
 from repro.serve import (MicroBatchScheduler, PipelineServer, RequestTimeout,
-                         RequestTrace, ServeRequest, ServerOverloaded,
-                         StageResultCache)
+                         RequestTrace, ServeConfig, ServeRequest,
+                         ServerOverloaded, StageResultCache)
 
 
 def _row(Q, i):
@@ -25,7 +25,7 @@ def _seq_backend(env):
 
 
 def _replay_rows(server, Q, order):
-    reqs = [server.submit(_row(Q, i)) for i in order]
+    reqs = [server.submit_one(_row(Q, i)) for i in order]
     server.pump()
     return [r.wait(30) for r in reqs]
 
@@ -89,7 +89,7 @@ def test_no_recompiles_after_warmup_across_100_requests(small_ir):
     be = JaxBackend(env["index"], default_k=60, query_chunk=4,
                     dense=env["backend"].dense)
     server = PipelineServer(Retrieve("BM25") % 10, be,
-                            cache_entries=0)        # force real execution
+                            ServeConfig.default(cache_entries=0))
     server.warmup(env["Q"])
     for rep in range(13):                           # 13 * 8 = 104 requests
         server.submit(env["Q"])
@@ -107,10 +107,10 @@ def test_no_recompiles_after_warmup_across_100_requests(small_ir):
 def test_repeated_query_full_cache_hit(small_ir):
     env = small_ir
     server = PipelineServer(Retrieve("BM25") % 10, env["backend"])
-    r1 = server.submit(_row(env["Q"], 0))
+    r1 = server.submit_one(_row(env["Q"], 0))
     server.pump()
     first = r1.wait(30)
-    r2 = server.submit(_row(env["Q"], 0))
+    r2 = server.submit_one(_row(env["Q"], 0))
     server.pump()
     second = r2.wait(30)
     assert r2.trace.cache_hit_depth == r2.trace.chain_len
@@ -126,13 +126,15 @@ def test_shared_cache_resumes_prefix_across_servers(small_ir):
     env = small_ir
     shared = StageResultCache(1024)
     s1 = PipelineServer(Retrieve("BM25", k=20) >> Extract("QL"),
-                        env["backend"], cache=shared, optimize=False)
+                        env["backend"], ServeConfig.default(optimize=False),
+                        cache=shared)
     assert len(s1.chain) == 2
     _replay_rows(s1, env["Q"], range(4))
     s2 = PipelineServer(Retrieve("BM25", k=20) >> Extract("TF_IDF"),
-                        env["backend"], cache=shared, optimize=False)
-    req = s2.submit(_row(env["Q"], 2))
-    server_new = s2.submit(_row(env["Q"], 6))       # never seen by s1
+                        env["backend"], ServeConfig.default(optimize=False),
+                        cache=shared)
+    req = s2.submit_one(_row(env["Q"], 2))
+    server_new = s2.submit_one(_row(env["Q"], 6))       # never seen by s1
     s2.pump()
     out = req.wait(30)
     out_new = server_new.wait(30)
@@ -147,7 +149,7 @@ def test_shared_cache_resumes_prefix_across_servers(small_ir):
                                    np.asarray(ref["features"])[i], rtol=1e-6)
         assert int(np.asarray(r["qid"])[0]) == i    # re-stamped, not donor's
     # the full second pipeline is now cached end-to-end
-    again = s2.submit(_row(env["Q"], 2))
+    again = s2.submit_one(_row(env["Q"], 2))
     s2.pump()
     again.wait(30)
     assert again.trace.cache_hit_depth == 2
@@ -156,7 +158,7 @@ def test_shared_cache_resumes_prefix_across_servers(small_ir):
 def test_stage_cache_lru_bound(small_ir):
     env = small_ir
     server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                            cache_entries=3)
+                            ServeConfig.default().with_cache(3))
     _replay_rows(server, env["Q"], range(8))
     info = server.stats()["stage_cache"]
     assert info["size"] <= 3
@@ -170,16 +172,16 @@ def test_stage_cache_lru_bound(small_ir):
 def test_admission_control_rejects_when_queue_full(small_ir):
     env = small_ir
     server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                            max_queue=2)
-    server.submit(_row(env["Q"], 0))
+                            ServeConfig.default().with_queue(2))
+    server.submit_one(_row(env["Q"], 0))
     with pytest.raises(ServerOverloaded):
         # burst admission is all-or-nothing: 2 rows into 1 free slot must
         # admit neither (partial admission would execute requests the
         # caller holds no handles to)
         server.submit({k: np.asarray(v)[1:3] for k, v in env["Q"].items()})
-    server.submit(_row(env["Q"], 1))
+    server.submit_one(_row(env["Q"], 1))
     with pytest.raises(ServerOverloaded):
-        server.submit(_row(env["Q"], 2))
+        server.submit_one(_row(env["Q"], 2))
     assert server.stats()["scheduler"]["rejected"] == 3
     server.pump()                                   # queued ones still serve
     assert server.stats()["served"] == 2
@@ -188,8 +190,8 @@ def test_admission_control_rejects_when_queue_full(small_ir):
 def test_expired_request_dropped_not_executed(small_ir):
     env = small_ir
     server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                            default_timeout_ms=10)
-    req = server.submit(_row(env["Q"], 0))
+                            ServeConfig.default().with_deadlines(10))
+    req = server.submit_one(_row(env["Q"], 0))
     time.sleep(0.05)
     server.pump()
     with pytest.raises(RequestTimeout):
@@ -245,11 +247,11 @@ def test_scheduler_bucket_selection_matches_ladder():
 def test_threaded_server_smoke(small_ir):
     env = small_ir
     server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                            max_wait_ms=2.0).start()
+                            ServeConfig.default(max_wait_ms=2.0)).start()
     try:
         reqs = []
         for i in range(24):
-            reqs.append(server.submit(_row(env["Q"], i % 8)))
+            reqs.append(server.submit_one(_row(env["Q"], i % 8)))
             time.sleep(0.001)
         outs = [r.wait(60) for r in reqs]
     finally:

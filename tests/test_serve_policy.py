@@ -1,0 +1,483 @@
+"""Deadline-aware serving policy: EDF packing, shed-before-execute, WFQ
+lane fairness, adaptive wait, the multi-tenant shared-cache server, and
+the ServeConfig front API (incl. the legacy-kwargs deprecation shim)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.common import select_ladder_bucket
+from repro.core import Extract, JaxBackend, Retrieve
+from repro.serve import (DeadlineUnmeetable, MicroBatchScheduler,
+                         MultiPipelineServer, PipelineServer, RequestTimeout,
+                         RequestTrace, ServeConfig, ServeRequest,
+                         ServerOverloaded, StageResultCache)
+
+
+def _row(Q, i):
+    return {k: np.asarray(v)[i:i + 1] for k, v in Q.items()}
+
+
+def _seq_backend(env):
+    return JaxBackend(env["index"], default_k=60, query_chunk=4,
+                      dense=env["backend"].dense, sharded=False)
+
+
+def _mk_req(rid, deadline=None, lane="default"):
+    return ServeRequest(rid=rid, Q=None, deadline=deadline, lane=lane,
+                        trace=RequestTrace(rid=rid))
+
+
+# ---------------------------------------------------------------------------
+# EDF packing
+# ---------------------------------------------------------------------------
+
+def test_edf_orders_mixed_deadlines():
+    """Batch packing is earliest-deadline-first: urgent requests jump the
+    arrival order; deadline-free requests ride last, FIFO among
+    themselves."""
+    sch = MicroBatchScheduler(ladder=(8,), max_wait_ms=1000.0)
+    now = time.monotonic()
+    sch.submit(_mk_req(0, deadline=now + 5.0))
+    sch.submit(_mk_req(1, deadline=None))
+    sch.submit(_mk_req(2, deadline=now + 1.0))
+    sch.submit(_mk_req(3, deadline=now + 3.0))
+    sch.submit(_mk_req(4, deadline=None))
+    b = sch.next_batch(drain=True)
+    assert [r.rid for r in b.requests] == [2, 3, 0, 1, 4]
+
+
+def test_edf_fifo_without_deadlines():
+    """No deadlines anywhere == the old FIFO behaviour, bit-identical."""
+    sch = MicroBatchScheduler(ladder=(4, 8), max_wait_ms=1000.0)
+    for i in range(19):
+        sch.submit(_mk_req(i))
+    sizes, rids = [], []
+    while True:
+        b = sch.next_batch(drain=True)
+        if b is None:
+            break
+        sizes.append((len(b.requests), b.reason))
+        rids.extend(r.rid for r in b.requests)
+    assert sizes == [(8, "full"), (8, "full"), (3, "drain")]
+    assert rids == list(range(19))
+
+
+# ---------------------------------------------------------------------------
+# shed-before-execute
+# ---------------------------------------------------------------------------
+
+def test_shed_rejects_unmeetable_deadline_at_submit():
+    sch = MicroBatchScheduler(ladder=(8,))
+    sch.note_service_time(0.1)                 # one batch costs 100ms
+    now = time.monotonic()
+    with pytest.raises(DeadlineUnmeetable):
+        sch.submit(_mk_req(0, deadline=now + 0.01))
+    # DeadlineUnmeetable IS a ServerOverloaded: existing shed-load handlers
+    # keep working
+    with pytest.raises(ServerOverloaded):
+        sch.submit(_mk_req(1, deadline=now + 0.01))
+    assert sch.stats()["shed_submit"] == 2
+    assert sch.qsize() == 0                    # never occupied queue space
+    # a feasible deadline still admits
+    sch.submit(_mk_req(2, deadline=now + 10.0))
+    assert sch.qsize() == 1
+
+
+def test_shed_estimates_queue_wait_ahead():
+    """With a backlog, the shed test charges (queued/max_batch) batches of
+    queue wait before the request's own batch."""
+    sch = MicroBatchScheduler(ladder=(4,))     # max_batch 4
+    sch.note_service_time(0.1)
+    now = time.monotonic()
+    for i in range(8):                         # 2 full batches ahead
+        sch.submit(_mk_req(i, deadline=now + 10.0))
+    # needs ~(8/4)*0.1 + 0.1 = 300ms; a 150ms deadline cannot survive
+    with pytest.raises(DeadlineUnmeetable):
+        sch.submit(_mk_req(9, deadline=now + 0.15))
+    sch.submit(_mk_req(10, deadline=now + 0.5))    # 500ms can
+
+
+def test_shed_drops_at_batch_close_without_ladder_slot():
+    """A request that became infeasible while queued is shed into
+    ``Batch.shed`` at close — the batch back-fills with feasible work
+    instead of spending a slot on it."""
+    sch = MicroBatchScheduler(ladder=(2,))
+    now = time.monotonic()
+    # no EWMA yet: everything admits
+    sch.submit(_mk_req(0, deadline=now + 0.02))
+    sch.submit(_mk_req(1, deadline=now + 30.0))
+    sch.submit(_mk_req(2, deadline=now + 30.0))
+    sch.note_service_time(0.1)                 # learned between submit/close
+    time.sleep(0.03)                           # rid 0's deadline now < S away
+    b = sch.next_batch(drain=True)
+    assert [r.rid for r in b.shed] == [0]
+    assert all(r.trace.shed for r in b.shed)
+    assert [r.rid for r in b.requests] == [1, 2]   # back-filled to max_batch
+    assert sch.stats()["shed_queue"] == 1
+
+
+def test_service_estimate_scales_by_bucket():
+    """Per-rung estimates: measured rungs are exact, unmeasured rungs
+    scale linearly from the nearest measured one."""
+    sch = MicroBatchScheduler(ladder=(2, 4, 8))
+    sch.note_service_time(0.4, 4)
+    assert sch.service_estimate() == pytest.approx(0.4)
+    assert sch.service_estimate(3) == pytest.approx(0.4)   # rung 4, measured
+    assert sch.service_estimate(1) == pytest.approx(0.2)   # rung 2, scaled
+    assert sch.service_estimate(8) == pytest.approx(0.8)   # rung 8, scaled
+    sch.note_service_time(0.3, 8)                          # now measured
+    assert sch.service_estimate(8) == pytest.approx(0.3)
+    assert sch.stats()["slot_ms_ewma"] is not None
+
+
+def test_bucket_estimate_affine_fit():
+    """With two measured rungs the estimate is an affine fit — it carries
+    the fixed per-batch dispatch cost instead of scaling it away."""
+    sch = MicroBatchScheduler(ladder=(2, 4, 8, 16))
+    sch.note_service_time(0.2, 2)
+    sch.note_service_time(0.44, 8)
+    # fit through (2, 0.2), (8, 0.44): c1 = 0.04/slot, c0 = 0.12 fixed
+    assert sch.service_estimate(4) == pytest.approx(0.28, rel=1e-6)
+    assert sch.service_estimate(16) == pytest.approx(0.76, rel=1e-6)
+
+
+def test_deadline_caps_batch_size():
+    """A batch never packs past the rung the most urgent taken deadline
+    can survive: with S(8) ~ 800ms, a 300ms deadline forces a 2-bucket
+    batch even though 8 requests are queued."""
+    sch = MicroBatchScheduler(ladder=(2, 4, 8), max_wait_ms=1000.0)
+    for _ in range(8):
+        sch.note_service_time(0.8, 8)    # 100ms/slot: S(2)=.2 S(4)=.4 S(8)=.8
+    now = time.monotonic()
+    sch.submit(_mk_req(0, deadline=now + 0.3))
+    for i in range(1, 8):
+        sch.submit(_mk_req(i, deadline=now + 30.0))
+    b = sch.next_batch(drain=True)
+    assert [r.rid for r in b.requests] == [0, 1] and not b.shed
+    b2 = sch.next_batch(drain=True)      # the loose tail packs freely
+    assert len(b2.requests) == 6
+
+
+def test_no_shedding_before_first_measurement():
+    """Until the EWMA has a sample, only already-expired deadlines shed —
+    the model never guesses."""
+    sch = MicroBatchScheduler(ladder=(8,))
+    now = time.monotonic()
+    sch.submit(_mk_req(0, deadline=now + 0.001))   # tight but future: admits
+    with pytest.raises(DeadlineUnmeetable):
+        sch.submit(_mk_req(1, deadline=now - 1.0))  # already expired
+
+
+# ---------------------------------------------------------------------------
+# WFQ lanes
+# ---------------------------------------------------------------------------
+
+def test_wfq_lane_weights_share_batch_slots():
+    sch = MicroBatchScheduler(ladder=(8,), lanes=(("fg", 3.0), ("bg", 1.0)),
+                              default_lane="fg")
+    for i in range(16):
+        sch.submit(_mk_req(i, lane="fg"))
+    for i in range(16, 32):
+        sch.submit(_mk_req(i, lane="bg"))
+    b = sch.next_batch(drain=True)             # "full": 8 slots
+    by_lane = {"fg": 0, "bg": 0}
+    for r in b.requests:
+        by_lane[r.lane] += 1
+    assert by_lane == {"fg": 6, "bg": 2}       # 3:1 weights over 8 slots
+
+
+def test_wfq_background_cannot_starve_interactive():
+    """A standing background backlog must not lock interactive arrivals
+    out of the next batch."""
+    sch = MicroBatchScheduler(ladder=(4,),
+                              lanes=(("interactive", 4.0),
+                                     ("background", 1.0)),
+                              default_lane="interactive")
+    for i in range(100):
+        sch.submit(_mk_req(i, lane="background"))
+    # background alone drains fine (no starvation the other way either)
+    b0 = sch.next_batch(drain=True)
+    assert len(b0.requests) == 4
+    for i in range(100, 104):
+        sch.submit(_mk_req(i, lane="interactive"))
+    b1 = sch.next_batch(drain=True)
+    lanes = [r.lane for r in b1.requests]
+    assert lanes.count("interactive") >= 3     # 4:1 weights over 4 slots
+
+
+def test_unknown_lane_raises():
+    sch = MicroBatchScheduler(ladder=(4,))
+    with pytest.raises(KeyError):
+        sch.submit(_mk_req(0, lane="nope"))
+
+
+# ---------------------------------------------------------------------------
+# adaptive wait + shared ladder policy
+# ---------------------------------------------------------------------------
+
+def test_adaptive_wait_shrinks_below_cap():
+    sch = MicroBatchScheduler(ladder=(64,), max_wait_ms=100.0,
+                              adaptive_wait=True)
+    for i in range(4):                         # back-to-back arrivals
+        sch.submit(_mk_req(i))
+    st = sch.stats()
+    assert st["arrival_gap_ewma_ms"] is not None
+    # 60 remaining slots at a ~0ms gap: the batch would fill immediately if
+    # traffic kept coming; waiting the full 100ms buys nothing
+    assert st["effective_wait_ms"] < 100.0
+
+
+def test_select_bucket_is_the_shared_ladder_policy(small_ir):
+    engine = small_ir["backend"].engine
+    sch = MicroBatchScheduler(ladder=engine.ladder)
+    for n in range(1, engine.ladder[-1] + 1):
+        assert sch.select_bucket(n) == engine.select_bucket(n) \
+            == select_ladder_bucket(engine.ladder, n)
+    # the engine refuses oversized batches (it chunk-plans them); the
+    # scheduler clamps (it reports a bucket for any batch it could close)
+    with pytest.raises(ValueError):
+        engine.select_bucket(engine.ladder[-1] + 1)
+    assert sch.select_bucket(engine.ladder[-1] + 1) == engine.ladder[-1]
+
+
+# ---------------------------------------------------------------------------
+# overload: goodput tracks throughput (server level)
+# ---------------------------------------------------------------------------
+
+def test_overload_goodput_tracks_throughput(small_ir):
+    """Under a backlog far past capacity with a tight deadline, the server
+    sheds infeasible work pre-execution; what it *does* execute lands in
+    time, so goodput stays proportional to throughput instead of
+    collapsing to ~0."""
+    env = small_ir
+    cfg = ServeConfig.default(cache_entries=0).with_batching(max_batch=8)
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"], cfg)
+    server.warmup(env["Q"])
+    # learn the service-time EWMA on real traffic, then pin it high enough
+    # that the shed math is timing-independent (the bench exercises the
+    # organic version)
+    for i in range(8):
+        server.submit_one(_row(env["Q"], i), timeout_ms=None)
+    server.pump()
+    assert server.scheduler.service_estimate() is not None
+    for _ in range(16):
+        server.scheduler.note_service_time(0.2, 8)
+    S = server.scheduler.service_estimate()
+    # deadline = 4 batches of headroom; with max_batch=8 the shed test
+    # rejects once ~3 batches (24 requests) are already queued ahead
+    deadline_ms = 1000.0 * 4.0 * S
+    n_shed_submit = 0
+    reqs = []
+    for i in range(64):
+        try:
+            reqs.append(server.submit_one(_row(env["Q"], i % 8),
+                                          timeout_ms=deadline_ms))
+        except DeadlineUnmeetable:
+            n_shed_submit += 1
+    server.pump()
+    stats = server.stats()
+    overload_served = stats["served"] - 8
+    assert n_shed_submit + stats["shed"] > 0   # overload actually shed
+    assert overload_served > 0                 # but work still flowed
+    # every request is accounted for: warm 8 + the 64 overload submissions
+    assert stats["served"] + stats["timed_out"] + n_shed_submit == 72
+    assert stats["scheduler"]["shed_submit"] == n_shed_submit
+    # goodput ≈ throughput: whatever the server DID execute arrived in
+    # time — overload cost answers, not wasted ladder slots
+    assert stats["late"] <= overload_served // 2
+    assert stats["recompiles_since_warmup"] == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving over one shared cache
+# ---------------------------------------------------------------------------
+
+def test_multi_tenant_cross_pipeline_prefix_resume(small_ir):
+    """Two pipelines sharing a retrieval prefix on ONE server: tenant B
+    resumes mid-chain from entries tenant A wrote into the shared cache,
+    and the hit is attributed cross-pipeline."""
+    env = small_ir
+    cfg = ServeConfig.default(optimize=False)
+    server = PipelineServer(Retrieve("BM25", k=20) >> Extract("QL"),
+                            env["backend"], cfg, name="ql")
+    tname = server.add_pipeline(Retrieve("BM25", k=20) >> Extract("TF_IDF"),
+                                name="tfidf")
+    assert tname == "tfidf"
+    assert server.pipelines() == ["ql", "tfidf"]
+    for i in range(4):
+        server.submit_one(_row(env["Q"], i))   # default tenant: "ql"
+    server.pump()
+    req = server.submit_one(_row(env["Q"], 2), pipeline="tfidf")
+    fresh = server.submit_one(_row(env["Q"], 6), pipeline="tfidf")
+    server.pump()
+    out = req.wait(30)
+    out_fresh = fresh.wait(30)
+    assert req.trace.cache_hit_depth == 1      # resumed after Retrieve
+    assert req.trace.cross_prefix_hit
+    assert fresh.trace.cache_hit_depth == 0
+    ref = (Retrieve("BM25", k=20) >> Extract("TF_IDF")).transform(
+        env["Q"], backend=_seq_backend(env), optimize=False)
+    for i, r in ((2, out), (6, out_fresh)):
+        np.testing.assert_array_equal(np.asarray(r["docids"])[0],
+                                      np.asarray(ref["docids"])[i])
+        np.testing.assert_allclose(np.asarray(r["features"])[0],
+                                   np.asarray(ref["features"])[i], rtol=1e-6)
+        assert int(np.asarray(r["qid"])[0]) == i
+    s = server.stats()
+    assert s["cross_pipeline_hits"] >= 1
+    assert s["stage_cache"]["cross_pipeline_hits"] >= 1
+    # stats()["pipelines"] is the per-tenant accounting, one entry per
+    # attached pipeline
+    assert set(s["pipelines"]) == {"ql", "tfidf"}
+    assert s["pipelines"]["ql"]["served"] == 4
+    assert s["pipelines"]["tfidf"]["served"] == 2
+    assert s["pipelines"]["tfidf"]["cross_pipeline_prefix_hits"] == 1
+    assert s["pipelines"]["ql"]["cross_pipeline_prefix_hits"] == 0
+
+
+def test_multi_tenant_zero_recompiles_after_warmup(small_ir):
+    env = small_ir
+    be = JaxBackend(env["index"], default_k=60, query_chunk=4,
+                    dense=env["backend"].dense)
+    server = MultiPipelineServer(
+        {"topk": Retrieve("BM25") % 10,
+         "feats": Retrieve("BM25", k=20) >> Extract("QL")},
+        be, ServeConfig.default(cache_entries=0))
+    warm = server.warmup(env["Q"])
+    assert warm["pipelines"] == ["topk", "feats"]
+    for rep in range(4):
+        for i in range(8):
+            server.submit_one(_row(env["Q"], i),
+                              pipeline=("topk", "feats")[i % 2])
+        server.pump()
+    s = server.stats()
+    assert s["served"] == 32
+    assert s["recompiles_since_warmup"] == 0
+    assert set(s["pipelines"]) == {"topk", "feats"}
+
+
+def test_add_pipeline_duplicate_name_raises(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"])
+    with pytest.raises(ValueError):
+        server.add_pipeline(Retrieve("BM25") % 20, name="default")
+    with pytest.raises(KeyError):
+        server.submit_one(_row(env["Q"], 0), pipeline="ghost")
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig front API + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_serve_config_builders_and_validation():
+    cfg = (ServeConfig.default(max_wait_ms=4.0)
+           .with_queue(128)
+           .with_batching(max_batch=16, adaptive_wait=True)
+           .with_deadlines(250.0, shed=True, service_ewma_alpha=0.5)
+           .with_lanes(("interactive", 4.0), ("background", 1.0))
+           .with_cache(512, cache_stages=False)
+           .with_tracing(True, capacity=99))
+    assert cfg.max_queue == 128 and cfg.max_batch == 16
+    assert cfg.adaptive_wait and cfg.shed
+    assert cfg.default_timeout_ms == 250.0
+    assert cfg.service_ewma_alpha == 0.5
+    assert cfg.lane_weights() == {"interactive": 4.0, "background": 1.0}
+    assert cfg.default_lane == "interactive"
+    assert cfg.cache_entries == 512 and not cfg.cache_stages
+    assert cfg.trace_stages and cfg.trace_capacity == 99
+    # frozen: builders return new values, never mutate
+    base = ServeConfig.default()
+    assert base.max_queue == 1024
+    with pytest.raises(Exception):
+        base.max_queue = 7
+    with pytest.raises(ValueError):
+        ServeConfig(lanes=())
+    with pytest.raises(ValueError):
+        ServeConfig(lanes=(("a", 1.0), ("a", 2.0)))
+    with pytest.raises(ValueError):
+        ServeConfig(lanes=(("a", -1.0),))
+    with pytest.raises(ValueError):
+        ServeConfig(default_lane="ghost")
+    d = cfg.as_dict()
+    assert d["lanes"] == [["interactive", 4.0], ["background", 1.0]]
+
+
+def test_legacy_kwargs_shim_warns_and_maps(small_ir):
+    env = small_ir
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                                max_queue=7, max_wait_ms=3.0,
+                                cache_entries=11, default_timeout_ms=90.0)
+    assert server.config.max_queue == 7
+    assert server.config.max_wait_ms == 3.0
+    assert server.config.cache_entries == 11
+    assert server.config.default_timeout_ms == 90.0
+
+
+def test_config_plus_legacy_kwargs_is_type_error(small_ir):
+    env = small_ir
+    with pytest.raises(TypeError, match="both"):
+        PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                       ServeConfig.default(), max_queue=7)
+    with pytest.raises(TypeError, match="unknown"):
+        PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                       max_qeue=7)                      # typo'd kwarg
+
+
+# ---------------------------------------------------------------------------
+# submit API redesign
+# ---------------------------------------------------------------------------
+
+def test_submit_always_returns_list_with_compat_proxy(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"])
+    res = server.submit(_row(env["Q"], 0))
+    assert isinstance(res, list) and len(res) == 1
+    with pytest.warns(DeprecationWarning, match="submit_one"):
+        rid = res.rid                          # legacy attribute access
+    assert rid == res[0].rid
+    multi = server.submit({k: np.asarray(v)[:3] for k, v in env["Q"].items()})
+    assert isinstance(multi, list) and len(multi) == 3
+    assert type(multi) is list                 # no proxy for real bursts
+    server.pump()
+
+
+def test_submit_one_requires_single_row(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"])
+    with pytest.raises(ValueError, match="submit_one"):
+        server.submit_one({k: np.asarray(v)[:3] for k, v in env["Q"].items()})
+
+
+def test_submit_wait_forwards_timeout_ms(small_ir):
+    env = small_ir
+    cfg = ServeConfig.default().with_deadlines(shed=False)
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"], cfg)
+    # a deadline already in the past expires at batch close -> the
+    # synchronous path can now express per-request deadlines
+    with pytest.raises(RequestTimeout):
+        server.submit_wait(_row(env["Q"], 0), timeout_ms=-50.0)
+    # and an explicit None = no deadline still serves
+    out = server.submit_wait(_row(env["Q"], 1), timeout_ms=None)
+    assert int(np.asarray(out["qid"])[0]) == 1
+
+
+def test_shared_cache_instance_across_servers_still_works(small_ir):
+    """The pre-multi-tenant sharing mode (one cache, several servers) is
+    unchanged — writer attribution defaults to each server's tenant
+    name."""
+    env = small_ir
+    shared = StageResultCache(256)
+    cfg = ServeConfig.default(optimize=False)
+    s1 = PipelineServer(Retrieve("BM25", k=20) >> Extract("QL"),
+                        env["backend"], cfg, cache=shared, name="s1")
+    s1.submit_one(_row(env["Q"], 3))
+    s1.pump()
+    s2 = PipelineServer(Retrieve("BM25", k=20) >> Extract("TF_IDF"),
+                        env["backend"], cfg, cache=shared, name="s2")
+    req = s2.submit_one(_row(env["Q"], 3))
+    s2.pump()
+    req.wait(30)
+    assert req.trace.cache_hit_depth == 1
+    assert req.trace.cross_prefix_hit          # writer "s1" != reader "s2"
