@@ -27,6 +27,12 @@ SERVE_MIN_LEVELS = 4
 SERVE_GOODPUT_WORKLOAD = "bm25_dense_rerank"
 SERVE_MIN_GOODPUT_FRAC = 0.5
 
+#: the IVF-PQ scan store must compress to at most 1/4 of the flat float
+#: store, while full-probe recall (every list scanned; only the
+#: exact-re-scored ADC shortlist bounds it) stays above the floor
+PQ_MAX_BYTES_FRACTION_DEN = 4
+PQ_MIN_FULL_PROBE_RECALL = 0.8
+
 
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "experiments/bench/summary.json"
@@ -50,6 +56,34 @@ def main() -> int:
         return 1
     if not dense.get("ivf"):
         print("FAIL: dense section has no ivf report", file=sys.stderr)
+        return 1
+    pq = dense.get("dense_pq")
+    if not pq:
+        print("FAIL: dense section has no dense_pq report", file=sys.stderr)
+        return 1
+    if not pq.get("pq_bytes_per_doc", 1e18) <= \
+            pq.get("flat_bytes_per_doc", 0) / PQ_MAX_BYTES_FRACTION_DEN:
+        print(f"FAIL: IVF-PQ store not <= 1/{PQ_MAX_BYTES_FRACTION_DEN} of "
+              f"the flat store: {pq.get('pq_bytes_per_doc')} vs "
+              f"{pq.get('flat_bytes_per_doc')} bytes/doc", file=sys.stderr)
+        return 1
+    if not pq.get("recall_at_k_full_probe", 0.0) >= PQ_MIN_FULL_PROBE_RECALL:
+        print(f"FAIL: IVF-PQ full-probe recall@k "
+              f"{pq.get('recall_at_k_full_probe')} < "
+              f"{PQ_MIN_FULL_PROBE_RECALL}", file=sys.stderr)
+        return 1
+    shard_rows = {r.get("shards"): r for r in pq.get("doc_shards", [])}
+    missing_shards = [s for s in (2, 4) if s not in shard_rows]
+    if missing_shards:
+        print(f"FAIL: dense_pq doc-shard scaling lacks shard counts "
+              f"{missing_shards} (present: {sorted(shard_rows)})",
+              file=sys.stderr)
+        return 1
+    bad_merge = [s for s, r in shard_rows.items()
+                 if not r.get("merge_matches_oracle")]
+    if bad_merge:
+        print(f"FAIL: doc-shard merge diverged from the single-shard "
+              f"oracle at shard counts {bad_merge}", file=sys.stderr)
         return 1
     serve = summary["serve"]
     sw = serve.get("workloads", {})

@@ -44,6 +44,22 @@ def fused_qps_metrics(summary: dict) -> dict[str, tuple[float, str]]:
     return out
 
 
+def dense_pq_metrics(summary: dict) -> dict[str, tuple[float, str]]:
+    """name -> (value, direction) for the IVF-PQ path: fused ADC QPS is
+    the gated throughput figure; the memory-reduction factor is gated too
+    (a shrinking factor means the compressed store silently grew)."""
+    out: dict[str, tuple[float, str]] = {}
+    pq = (summary.get("dense") or {}).get("dense_pq") or {}
+    for key in ("fused_qps", "unfused_qps"):
+        v = pq.get(key)
+        if v is not None:
+            out[f"dense.dense_pq.{key}"] = (float(v), "higher")
+    red = pq.get("memory_reduction_x")
+    if red is not None:
+        out["dense.dense_pq.memory_reduction_x"] = (float(red), "higher")
+    return out
+
+
 def serve_metrics(summary: dict) -> dict[str, tuple[float, str]]:
     """name -> (value, direction) for the serving trajectory: the serve
     bench pre-selects its gated metrics (light-load batched p95, saturation
@@ -66,7 +82,7 @@ def collect_metrics(summary: dict, label: str) -> dict[str, tuple[float, str]]:
     predates a section or a schema change) is degraded to 'fewer metrics',
     with a warning, instead of crashing the job."""
     out: dict[str, tuple[float, str]] = {}
-    for extract in (fused_qps_metrics, serve_metrics):
+    for extract in (fused_qps_metrics, dense_pq_metrics, serve_metrics):
         try:
             out.update(extract(summary))
         except Exception as e:      # old-schema artifact: warn and skip

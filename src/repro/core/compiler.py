@@ -66,7 +66,9 @@ class JaxBackend:
                  sharded: bool | None = None,
                  engine: ShardedQueryEngine | None = None,
                  bucket_ladder=None, ivf=None, ivf_lists: int | None = None,
-                 ivf_iters: int = 6, ivf_seed: int = 0):
+                 ivf_iters: int = 6, ivf_seed: int = 0,
+                 ivf_keep_flat: bool = True, ivfpq=None, pq_m: int = 8,
+                 pq_iters: int = 10, pq_refine: int = 4):
         self.index = index
         self.uid = next(_BACKEND_UID)
         self.default_k = min(default_k, index.n_docs)
@@ -100,6 +102,16 @@ class JaxBackend:
         self.ivf_lists = ivf_lists
         self.ivf_iters = ivf_iters
         self.ivf_seed = ivf_seed
+        #: keep_flat=False drops the list-ordered float duplicate from the
+        #: lazily built IVF (PQ-only deployments; flat-IVF search then
+        #: raises).  Digest-relevant: it changes which paths can execute.
+        self.ivf_keep_flat = ivf_keep_flat
+        # IVF-PQ config: same lazy-build/config-digest story as the IVF
+        self._ivfpq = ivfpq
+        self._ivfpq_external = ivfpq is not None
+        self.pq_m = int(pq_m)
+        self.pq_iters = int(pq_iters)
+        self.pq_refine = int(pq_refine)
         rng = np.random.default_rng(seed)
         self._qproj = jnp.asarray(
             rng.standard_normal((index.vocab, self.dense.dim)).astype(np.float32)
@@ -127,8 +139,24 @@ class JaxBackend:
             from repro.index.dense import build_ivf_index
             self._ivf = build_ivf_index(self.dense, n_lists=self.ivf_lists,
                                         iters=self.ivf_iters,
-                                        seed=self.ivf_seed)
+                                        seed=self.ivf_seed,
+                                        keep_flat=self.ivf_keep_flat)
         return self._ivf
+
+    @property
+    def ivfpq(self):
+        """IVF-PQ compressed dense index
+        (``repro.index.dense.IVFPQIndex``), built on first use.  Shares the
+        coarse quantiser with ``self.ivf`` when that is already built (or
+        external); otherwise builds a ``keep_flat=False`` skeleton so no
+        list-ordered float copy is ever materialised."""
+        if self._ivfpq is None:
+            from repro.index.dense import build_ivfpq_index
+            self._ivfpq = build_ivfpq_index(
+                self.dense, n_lists=self.ivf_lists, iters=self.ivf_iters,
+                seed=self.ivf_seed, m=self.pq_m, pq_iters=self.pq_iters,
+                ivf=self._ivf)
+        return self._ivfpq
 
     # -- query-axis execution ----------------------------------------------
     def vmap_queries(self, fn, Q, *extra, key=None):

@@ -42,7 +42,7 @@ from pathlib import Path
 #: subsets; ``JaxBackend.CAPABILITIES`` aliases this for compatibility)
 DEFAULT_CAPABILITIES = frozenset({
     "pruned_topk", "fat", "multi_model", "fused_topk", "fused_scoring",
-    "dense_topk", "fused_dense",
+    "dense_topk", "fused_dense", "pq_topk",
 })
 
 
@@ -69,6 +69,7 @@ class TuningProfile:
     def __init__(self, path: str | Path | None = None):
         self.path = None if path is None else Path(path)
         self.entries: dict[str, dict] = {}
+        self.calibration: dict | None = None
         self.hits = 0
         self.misses = 0
         self.dirty = False
@@ -86,11 +87,14 @@ class TuningProfile:
             if not isinstance(entries, dict):
                 raise TypeError("entries must be a mapping")
             self.entries = entries
+            cal = doc.get("calibration")
+            self.calibration = cal if isinstance(cal, dict) else None
         except Exception:
             # corrupt / truncated / foreign / old-version file: a tuning
             # store must degrade to re-tuning, never take the compile down
             self.path.unlink(missing_ok=True)
             self.entries = {}
+            self.calibration = None
 
     def save(self) -> None:
         """Atomic publish (pid-suffixed tmp + replace — the ArtifactCache
@@ -99,6 +103,8 @@ class TuningProfile:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
         doc = {"version": self.VERSION, "entries": self.entries}
+        if self.calibration is not None:
+            doc["calibration"] = self.calibration
         tmp = self.path.with_name(f"{self.path.name}.{os.getpid()}.tmp")
         tmp.write_text(json.dumps(doc, indent=1))
         tmp.replace(self.path)
@@ -128,10 +134,49 @@ class TuningProfile:
             self.entries[k] = ent
             self.dirty = True
 
+    # -- roofline auto-refit ------------------------------------------------
+    def note_calibration(self, fit: dict | None) -> None:
+        """Record the bench trajectory's latest roofline fit
+        (``hlo_cost.fit_peaks`` output).  Descriptors attaching this
+        profile via ``with_profile`` auto-apply a noted fit that is newer
+        than their current ``peak_digest`` — no explicit
+        ``descriptor.calibrated(fit)`` call needed."""
+        if not isinstance(fit, dict) or \
+                "peak_flops_per_s" not in fit or "peak_bytes_per_s" not in fit:
+            return
+        ent = {"fit": _jsonable(fit), "applied_digest": None}
+        if (self.calibration or {}).get("fit") != ent["fit"]:
+            self.calibration = ent
+            self.dirty = True
+
+    def refresh_from_summary(self, summary: dict) -> None:
+        """Pull the ``calibration_fit`` block out of a bench-trajectory
+        summary (the autotune section emits it) into this profile."""
+        self.note_calibration((summary.get("autotune") or
+                               {}).get("calibration_fit"))
+
+    def pending_fit(self, peak_digest: str) -> dict | None:
+        """The noted fit, if it has not yet been applied to a descriptor
+        with this ``peak_digest`` (i.e. the trajectory is newer than the
+        profile's recorded calibration state)."""
+        cal = self.calibration
+        if not cal or not isinstance(cal.get("fit"), dict):
+            return None
+        if cal.get("applied_digest") == peak_digest:
+            return None
+        return cal["fit"]
+
+    def mark_calibrated(self, peak_digest: str) -> None:
+        if self.calibration is not None and \
+                self.calibration.get("applied_digest") != peak_digest:
+            self.calibration["applied_digest"] = peak_digest
+            self.dirty = True
+
     def info(self) -> dict:
         return {"path": None if self.path is None else str(self.path),
                 "entries": len(self.entries), "hits": self.hits,
-                "misses": self.misses, "dirty": self.dirty}
+                "misses": self.misses, "dirty": self.dirty,
+                "calibrated": bool(self.calibration)}
 
 
 def _jsonable(d: dict) -> dict:
@@ -185,12 +230,14 @@ class BackendDescriptor:
                                              PEAK_FLOPS_PER_S,
                                              host_fingerprint)
         from repro.kernels.dense_scoring.ops import MAX_KERNEL_K as DENSE_K
+        from repro.kernels.pq_scoring.ops import MAX_KERNEL_K as PQ_K
         from repro.kernels.topk.ops import MAX_KERNEL_K as TOPK_K
         kw = dict(
             capabilities=(DEFAULT_CAPABILITIES if capabilities is None
                           else frozenset(capabilities)),
             kernel_limits=(("topk", TOPK_K), ("fat", None),
-                           ("dense_topk", DENSE_K), ("dense_rerank", DENSE_K)),
+                           ("dense_topk", DENSE_K), ("dense_rerank", DENSE_K),
+                           ("pq_topk", PQ_K)),
             peak_flops_per_s=PEAK_FLOPS_PER_S,
             peak_bytes_per_s=PEAK_BYTES_PER_S,
             host=host_fingerprint(),
@@ -198,8 +245,19 @@ class BackendDescriptor:
         kw.update(overrides)
         return cls(**kw)
 
-    def with_profile(self, profile: TuningProfile | None) -> "BackendDescriptor":
-        return dataclasses.replace(self, profile=profile)
+    def with_profile(self, profile: TuningProfile | None, *,
+                     auto_refit: bool = True) -> "BackendDescriptor":
+        """Attach a tuning profile.  If the profile carries a roofline
+        calibration fit newer than this descriptor's ``peak_digest`` (the
+        bench trajectory was re-fit since the profile last calibrated a
+        descriptor), apply ``calibrated(fit)`` automatically."""
+        d = dataclasses.replace(self, profile=profile)
+        if auto_refit and profile is not None:
+            fit = profile.pending_fit(d.peak_digest)
+            if fit is not None:
+                d = d.calibrated(fit)
+                profile.mark_calibrated(d.peak_digest)
+        return d
 
     def with_autotune(self, enabled: bool = True, *,
                       band: float | None = None,

@@ -60,6 +60,26 @@ def default_bucket_ladder(n_devices: int, *, base: int = 8,
     return tuple(sorted(ladder))
 
 
+def merge_shard_topk(parts, *, k: int):
+    """Cross-shard top-k merge of per-shard ``(docids, scores)`` results
+    (each ``[nq, k_s]``, global doc ids, invalid entries ``-1``/``-inf``).
+
+    Host-side with *streaming-merge semantics*: the stable descending sort
+    keeps the first-seen entry among score ties, and because shards are
+    contiguous ascending doc-id ranges presented in shard order (and
+    ``lax.top_k`` inside each shard already breaks ties to the lowest
+    local = global id), ties resolve to the lowest global doc id — exactly
+    the single-index oracle's rule, making the merge bit-identical to
+    ``dense_retrieve_exact`` on the unsharded index."""
+    docs = np.concatenate([np.asarray(d) for d, _ in parts], axis=1)
+    vals = np.concatenate([np.asarray(v) for _, v in parts], axis=1)
+    if docs.shape[1] < k:
+        raise ValueError(f"merge width {docs.shape[1]} < k={k}")
+    sel = np.argsort(-vals, axis=1, kind="stable")[:, :k]
+    rows = np.arange(docs.shape[0])[:, None]
+    return docs[rows, sel], vals[rows, sel]
+
+
 @dataclasses.dataclass(frozen=True)
 class StageProgram:
     """The engine's unit of execution: a per-query function plus the key
@@ -94,7 +114,10 @@ class ShardedQueryEngine:
                  max_chunk_entries: int | None = 64):
         self.mesh = mesh if mesh is not None else make_query_mesh(
             max_devices=max_devices)
-        self.n_devices = int(self.mesh.devices.size)
+        # on a 2-D (query x doc-shard) mesh only the "data" axis carries
+        # the query batch; the "docs" axis groups devices by document shard
+        self.n_devices = int(dict(self.mesh.shape).get(
+            "data", self.mesh.devices.size))
         self.ladder = (tuple(sorted(int(b) for b in ladder)) if ladder
                        else default_bucket_ladder(self.n_devices))
         if any(b % self.n_devices for b in self.ladder):
@@ -299,6 +322,18 @@ class ShardedQueryEngine:
     def map_queries(self, fn, Q, *extra, key=None):
         """Compatibility wrapper over :meth:`run`."""
         return self.run(StageProgram(key=key, fn=fn), Q, *extra)
+
+    def run_doc_sharded(self, programs: Sequence[StageProgram], Q, *extra,
+                        k: int):
+        """Doc-axis sharded top-k: run one StageProgram per document shard
+        (each closing over its contiguous shard and emitting *global* doc
+        ids, e.g. built over ``index.dense.shard_dense_index``), then merge
+        the per-shard ``(docids, scores)`` across shards on the host with
+        :func:`merge_shard_topk`.  Per-shard dispatch stays fully async;
+        the merge is the one synchronisation point."""
+        parts = [self.run(p, Q, *extra) for p in programs]
+        self.barrier(parts)
+        return merge_shard_topk(parts, k=k)
 
     def _materialize(self, outs, plan):
         _, n_tail, b_tail = plan[-1]

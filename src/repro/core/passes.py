@@ -657,8 +657,13 @@ class FusionPass(Pass):
         k_in = min(k_in, be.index.n_docs)
         from repro.index import retrieve as RT
         mp = be.max_postings
-        if inner.kind == "dense_retrieve" and desc.supports("dense_topk"):
-            return self._fuse_dense_retrieve(op, inner, K, k_in, pctx)
+        if inner.kind == "dense_retrieve":
+            need = "pq_topk" if (inner.params.get("pq")
+                                 and inner.params.get("nprobe")) \
+                else "dense_topk"
+            if desc.supports(need):
+                return self._fuse_dense_retrieve(op, inner, K, k_in, pctx)
+            return op
         if inner.kind == "retrieve" and desc.supports("fused_topk"):
             model = inner.params["model"]
             fused = leaf(S.FusedTopKRetrieve(model=model, k=K))
@@ -722,8 +727,37 @@ class FusionPass(Pass):
         be = pctx.backend
         desc = self._desc(pctx)
         nprobe = inner.params["nprobe"]
-        fused = leaf(S.FusedDenseRetrieve(k=K, nprobe=nprobe))
         qv = _abstract_qvec(be)
+        if nprobe and inner.params.get("pq"):
+            # two-level IVF-PQ: the fused candidate replicates the *unfused*
+            # chain's ADC shortlist depth (computed from the pre-cutoff
+            # k_in) so fusion stays an exact rewrite — cutoff(topK) of the
+            # re-scored shortlist commutes with selecting K directly.  The
+            # kernel-native predicate is evaluated at that depth: it is the
+            # k the streaming kernel must carry.
+            pqi = be.ivfpq
+            npb = min(nprobe, pqi.n_lists)
+            refine = be.pq_refine
+            r = DN._pq_shortlist_depth(k_in, refine, npb * pqi.max_list_len)
+            fused = leaf(S.FusedDenseRetrieve(k=K, nprobe=nprobe, pq=True,
+                                              pq_shortlist=r))
+            if self._gate(pctx, "pq_topk",
+                          kernel_native=desc.kernel_native("pq_topk", r),
+                          args=(_abstract_sds(pqi), qv),
+                          unfused=("pq_topk_unfused", k_in, nprobe, refine),
+                          fused=("pq_topk_fused", K, nprobe, refine, r),
+                          build_unfused=lambda: (
+                              lambda ix, q: DN.ivfpq_retrieve_topk(
+                                  ix, q, k=k_in, nprobe=npb, refine=refine)),
+                          build_fused=lambda: (
+                              lambda ix, q: DN.ivfpq_retrieve_topk_fused(
+                                  ix, q, k=K, nprobe=npb, refine=refine,
+                                  shortlist=r)),
+                          probe=lambda n: ((pqi,), (_probe_qvecs(be, n),))):
+                pctx.trace.append(("fuse_pq_topk", op, fused))
+                return self._tune_dense_knobs(fused, pctx)
+            return op
+        fused = leaf(S.FusedDenseRetrieve(k=K, nprobe=nprobe))
         if nprobe:
             npb = min(nprobe, be.ivf.n_lists)
             args = (_abstract_sds(be.ivf), qv)
@@ -747,7 +781,15 @@ class FusionPass(Pass):
                       build_unfused=build_u, build_fused=build_f,
                       probe=probe):
             pctx.trace.append(("fuse_dense_topk", op, fused))
-            return fused
+            return self._tune_dense_knobs(fused, pctx) if nprobe else fused
+        return op
+
+    def _tune_dense_knobs(self, op: Op, pctx: PassContext) -> Op:
+        """Hook for the AutotunePass's IVF knob search (``nprobe``, PQ
+        candidate block).  The static pass keeps the configured knobs: a
+        different ``nprobe`` changes which lists are scanned, so it is only
+        acceptable when *measured* both faster and within the descriptor's
+        result-overlap band."""
         return op
 
     # -- dense second stage: retrieve >> cutoff(dense_rerank) --------------
@@ -911,6 +953,136 @@ class AutotunePass(FusionPass):
                   "unfused_measured_s": m_u, "fused_measured_s": m_f})
         return d
 
+    # -- IVF knob search: nprobe (and PQ candidate block on TPU) ------------
+    def _tune_dense_knobs(self, op: Op, pctx: PassContext) -> Op:
+        """Measured ``nprobe`` search around the configured value, on an
+        already accepted fused dense stage.  Speed alone would always shrink
+        ``nprobe`` (fewer lists scanned is strictly less work) and silently
+        trash recall, so a candidate is eligible only if its top-K overlap
+        against the *widest* candidate stays within the descriptor's
+        ``autotune_band``; the fastest eligible candidate wins.  For PQ on a
+        TPU backend the candidate-block size of the streaming ADC kernel is
+        probed the same way (on CPU the reference path ignores it)."""
+        import jax
+        desc = self._desc(pctx)
+        be = pctx.backend
+        params = dict(op.params)
+        nprobe = params.get("nprobe")
+        if not nprobe:
+            return op
+        from repro.index import dense as DN
+        pq = bool(params.get("pq"))
+        K = params["k"]
+        if pq:
+            index = be.ivfpq
+            refine = be.pq_refine
+            sl = params.get("pq_shortlist")
+            fn_for = lambda c: (lambda ix, q: DN.ivfpq_retrieve_topk_fused(
+                ix, q, k=K, nprobe=c, refine=refine, shortlist=sl))
+        else:
+            index = be.ivf
+            refine = None
+            fn_for = lambda c: (lambda ix, q: DN.ivf_retrieve_topk_fused(
+                ix, q, k=K, nprobe=c))
+        npb = min(int(nprobe), index.n_lists)
+        cands = sorted({max(1, npb // 2), npb,
+                        min(2 * npb, index.n_lists)})
+        chosen = self._probe_knob(
+            pctx, pattern="nprobe_tune", knob="nprobe", configured=npb,
+            cands=cands, index=index, fn_for=fn_for,
+            extra_key=(pq, K, refine))
+        if chosen is not None and chosen != params["nprobe"]:
+            params["nprobe"] = chosen
+            op = leaf(S.FusedDenseRetrieve(**params))
+        if pq and jax.default_backend() == "tpu":
+            from repro.kernels.pq_scoring.pq_scoring import BLOCK_C
+            npb = min(int(params["nprobe"]), index.n_lists)
+            sl = params.get("pq_shortlist")
+            blk_for = lambda c: (
+                lambda ix, q: DN.ivfpq_retrieve_topk_fused(
+                    ix, q, k=K, nprobe=npb, refine=refine, block=c,
+                    shortlist=sl))
+            chosen_b = self._probe_knob(
+                pctx, pattern="pq_block_tune", knob="pq_block",
+                configured=params.get("pq_block") or BLOCK_C,
+                cands=[BLOCK_C // 2, BLOCK_C, BLOCK_C * 2],
+                index=index, fn_for=blk_for,
+                extra_key=(params["nprobe"], K, refine))
+            if chosen_b is not None and chosen_b != params.get("pq_block"):
+                params["pq_block"] = chosen_b
+                op = leaf(S.FusedDenseRetrieve(**params))
+        return op
+
+    def _probe_knob(self, pctx, *, pattern, knob, configured, cands,
+                    index, fn_for, extra_key):
+        """Measure each knob candidate on the concrete probe batch; return
+        the fastest whose top-K doc overlap vs the widest candidate is >=
+        1 - autotune_band (None = keep the configured value).  Decisions are
+        persisted in the TuningProfile and replayed like gate decisions."""
+        import numpy as np
+        desc = self._desc(pctx)
+        be = pctx.backend
+        prof = desc.profile
+        opk = (pattern, knob, tuple(cands), extra_key)
+        bd = None
+        if prof is not None:
+            bd = _backend_gate_digest(be)
+            hit = prof.lookup(bd, opk, GATE_MAXQ)
+            if hit is not None:
+                pctx.counters["profile_hits"] += 1
+                d = dict(hit)
+                d["source"] = "profile"
+                pctx.decisions.append(d)
+                return d.get("chosen")
+            pctx.counters["profile_misses"] += 1
+        if len(cands) < 2:
+            return None
+        import jax
+        try:
+            qvecs = _probe_qvecs(be, desc.probe_queries)
+            times, docs = {}, {}
+            for c in cands:
+                vf = jax.jit(jax.vmap(fn_for(c), in_axes=(None, 0)))
+                out = vf(index, qvecs)
+                jax.block_until_ready(out)
+                docs[c] = np.asarray(out[0])
+                best = float("inf")
+                for _ in range(max(desc.probe_repeats, 1)):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(vf(index, qvecs))
+                    best = min(best, time.perf_counter() - t0)
+                times[c] = best
+        except Exception:
+            return None            # probe failure: keep the configured knob
+        pctx.counters["probe_measurements"] += len(cands)
+        ref = docs[cands[-1]]
+
+        def overlap(a):
+            tot = 0.0
+            for i in range(ref.shape[0]):
+                want = {int(x) for x in ref[i] if x >= 0}
+                got = {int(x) for x in a[i] if x >= 0}
+                tot += len(want & got) / max(len(want), 1)
+            return tot / max(ref.shape[0], 1)
+
+        ovl = {c: overlap(docs[c]) for c in cands}
+        floor = 1.0 - desc.autotune_band
+        eligible = [c for c in cands if ovl[c] >= floor]
+        chosen = min(eligible, key=lambda c: times[c]) if eligible \
+            else cands[-1]
+        d = {"pattern": pattern, "knob": knob, "configured": configured,
+             "candidates": list(cands), "chosen": chosen,
+             "accepted": bool(chosen != configured), "source": "measured",
+             "measured_knob_s": {str(c): times[c] for c in cands},
+             "overlap_at_k": {str(c): ovl[c] for c in cands},
+             "kernel_native": True,
+             "unfused_proxy_s": None, "fused_proxy_s": None,
+             "unfused_measured_s": None, "fused_measured_s": None}
+        pctx.decisions.append(d)
+        if prof is not None:
+            prof.record(bd, opk, GATE_MAXQ, d)
+        return chosen
+
     def _tune_mixed_linear(self, op: Op, pctx: PassContext) -> Op:
         """Σ wᵢ·Retrieve(mᵢ, kᵢ) with *differing* kᵢ -> MultiRetrieve at
         max(kᵢ) when measured faster.  ``retrieve_multi`` combines the full
@@ -1032,6 +1204,14 @@ def explain_pipeline(node: Transformer, backend=None, *,
                                                                    backend)))
     for d in pctx.decisions:
         fmt = lambda v: "n/a" if v is None else f"{v:.4e}s"
+        if d.get("knob"):
+            out.append(
+                f"-- autotune knob [{d['pattern']}]: "
+                f"{d['knob']}={d['chosen']} "
+                f"(configured {d['configured']}, "
+                f"candidates {d['candidates']}, "
+                f"{d.get('source', 'measured')})")
+            continue
         line = (f"-- fusion gate [{d['pattern']}]: "
                 f"{'fused' if d['accepted'] else 'kept unfused'} "
                 f"(predicted fused {fmt(d['fused_proxy_s'])} vs "

@@ -112,9 +112,16 @@ def backend_digest(backend: JaxBackend) -> str:
         ivf_part = (backend.ivf if backend._ivf_external
                     else (-1 if backend.ivf_lists is None
                           else backend.ivf_lists,
-                          backend.ivf_iters, backend.ivf_seed))
+                          backend.ivf_iters, backend.ivf_seed,
+                          bool(getattr(backend, "ivf_keep_flat", True))))
+        pq_part = (backend.ivfpq if getattr(backend, "_ivfpq_external",
+                                            False)
+                   else (getattr(backend, "pq_m", 8),
+                         getattr(backend, "pq_iters", 10),
+                         getattr(backend, "pq_refine", 4)))
         dig = content_token((backend.index, backend.default_k,
-                             backend.dense.emb, backend._qproj, ivf_part))
+                             backend.dense.emb, backend._qproj, ivf_part,
+                             pq_part))
         backend._content_digest = dig
     return dig
 

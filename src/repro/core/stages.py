@@ -179,12 +179,16 @@ class DenseRetrieve(Transformer):
     """ANN-style dense candidate generation over the IVF dense index
     (Q -> R): embed the query, probe the ``nprobe`` closest coarse lists,
     score only those lists' documents.  ``nprobe=0`` scores every document
-    (exact brute force) — the mode dense equivalence tests pin against."""
+    (exact brute force) — the mode dense equivalence tests pin against.
+    ``pq=True`` scores candidates against the compressed IVF-PQ store
+    (ADC table lookups + exact float re-scoring of the final-K shortlist)
+    instead of the float list store."""
     kind = "dense_retrieve"
     reads_results = False
 
-    def __init__(self, k: int | None = None, nprobe: int = 8):
-        super().__init__(k=k, nprobe=int(nprobe))
+    def __init__(self, k: int | None = None, nprobe: int = 8,
+                 pq: bool = False):
+        super().__init__(k=k, nprobe=int(nprobe), pq=bool(pq))
 
     def execute(self, ctx, Q, R):
         from repro.index import dense as DN
@@ -192,7 +196,13 @@ class DenseRetrieve(Transformer):
         k = min(self.params["k"] or be.default_k, be.index.n_docs)
         nprobe = self.params["nprobe"]
         qvecs = be.embed_queries(Q)
-        if nprobe:
+        if nprobe and self.params["pq"]:
+            pq = be.ivfpq
+            npb = min(nprobe, pq.n_lists)
+            refine = be.pq_refine
+            one = lambda qv: DN.ivfpq_retrieve_topk(pq, qv, k=k, nprobe=npb,
+                                                    refine=refine)
+        elif nprobe:
             ivf = be.ivf
             npb = min(nprobe, ivf.n_lists)
             one = lambda qv: DN.ivf_retrieve_topk(ivf, qv, k=k, nprobe=npb)
@@ -205,13 +215,22 @@ class DenseRetrieve(Transformer):
 
 class FusedDenseRetrieve(Transformer):
     """``DenseRetrieve % K`` lowered to the blocked-matmul + streaming-top-k
-    kernel path (``kernels/dense_scoring``) at the cutoff depth, created by
-    the cost-gated IR lowering pass (core/passes.py)."""
+    kernel path (``kernels/dense_scoring``, or ``kernels/pq_scoring`` when
+    ``pq=True``) at the cutoff depth, created by the cost-gated IR lowering
+    pass (core/passes.py).  ``pq_block`` pins the PQ kernel's candidate
+    block size (autotuned; ``None`` = package default); ``pq_shortlist``
+    pins the ADC shortlist depth (the gate sets it to the *unfused*
+    chain's depth so fusion is an exact rewrite; ``None`` = refine*k)."""
     kind = "fused_dense_retrieve"
     reads_results = False
 
-    def __init__(self, k: int = 10, nprobe: int = 8):
-        super().__init__(k=int(k), nprobe=int(nprobe))
+    def __init__(self, k: int = 10, nprobe: int = 8, pq: bool = False,
+                 pq_block: int | None = None,
+                 pq_shortlist: int | None = None):
+        super().__init__(
+            k=int(k), nprobe=int(nprobe), pq=bool(pq),
+            pq_block=None if pq_block is None else int(pq_block),
+            pq_shortlist=None if pq_shortlist is None else int(pq_shortlist))
 
     def execute(self, ctx, Q, R):
         from repro.index import dense as DN
@@ -219,7 +238,16 @@ class FusedDenseRetrieve(Transformer):
         k = min(self.params["k"], be.index.n_docs)
         nprobe = self.params["nprobe"]
         qvecs = be.embed_queries(Q)
-        if nprobe:
+        if nprobe and self.params["pq"]:
+            pq = be.ivfpq
+            npb = min(nprobe, pq.n_lists)
+            refine = be.pq_refine
+            block = self.params["pq_block"]
+            shortlist = self.params["pq_shortlist"]
+            one = lambda qv: DN.ivfpq_retrieve_topk_fused(
+                pq, qv, k=k, nprobe=npb, refine=refine, block=block,
+                shortlist=shortlist)
+        elif nprobe:
             ivf = be.ivf
             npb = min(nprobe, ivf.n_lists)
             one = lambda qv: DN.ivf_retrieve_topk_fused(ivf, qv, k=k,

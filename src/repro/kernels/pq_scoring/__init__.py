@@ -1,0 +1,1 @@
+from repro.kernels.pq_scoring.ops import streaming_pq_topk  # noqa: F401

@@ -1,0 +1,47 @@
+"""Jitted wrapper for the PQ/ADC-scoring kernel (pads the candidate axis,
+falls back to the ``lax.top_k`` oracle for large k / non-TPU backends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import round_up
+from repro.kernels.pq_scoring.pq_scoring import BLOCK_C, pq_topk_pallas
+from repro.kernels.pq_scoring.ref import pq_topk_ref
+from repro.kernels.topk.topk import NEG
+
+MAX_KERNEL_K = 128
+
+
+def kernel_native(k: int) -> bool:
+    """Whether the Pallas kernel itself serves this shortlist depth on TPU
+    (larger k falls back to the oracle).  The IR fusion pass
+    (core/passes.py) records this so gate decisions distinguish
+    kernel-native lowerings from oracle-served ones."""
+    return k <= MAX_KERNEL_K
+
+
+def streaming_pq_topk(codes, table, base=None, *, k: int,
+                      block: int = BLOCK_C, impl: str = "auto",
+                      interpret: bool = False):
+    """Top-k of the ADC scores ``sum_s table[s, codes[:, s]] + base`` (base
+    defaults to 0) without ever materialising + sorting the full score
+    vector on the kernel path.  Returns values sorted descending (ties to
+    the lowest index, matching ``lax.top_k``) + their row indices into
+    ``codes``; padded rows score ``NEG`` and can never enter the top-k of
+    real candidates."""
+    if impl == "auto":
+        impl = "pallas" if (jax.default_backend() == "tpu" and
+                            k <= MAX_KERNEL_K) else "ref"
+    if impl == "ref" or k > MAX_KERNEL_K:
+        return pq_topk_ref(codes, table, base, k=k)
+    n, m = codes.shape
+    n_pad = round_up(max(n, block), block)
+    if base is None:
+        base = jnp.zeros((n,), jnp.float32)
+    codes_p = jnp.pad(codes, ((0, n_pad - n), (0, 0)))
+    base_p = jnp.pad(base.astype(jnp.float32), (0, n_pad - n),
+                     constant_values=NEG)
+    return pq_topk_pallas(
+        codes_p, table.astype(jnp.float32), base_p, k=k, block=block,
+        interpret=interpret or jax.default_backend() != "tpu")

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for streaming_pq_topk.
+
+Shape of the computation matters beyond correctness: the IR fusion pass
+cost-gates the kernel lowering by comparing optimized-HLO proxies, and the
+*unfused* PQ path (``index/dense.py::ivfpq_retrieve_topk``) scores
+candidates with exactly the expression below — so on hosts where the
+kernel falls back to this oracle, a fused candidate at the same shortlist
+depth prices identical to its unfused twin and the strictly-cheaper gate
+correctly declines the rewrite.  ``lax.top_k`` breaks ADC ties (distinct
+docs sharing a code word) to the lowest index, the same rule the kernel's
+``lexsort`` ordering enforces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_topk_ref(codes, table, base=None, *, k: int):
+    """codes [N, m] uint8, table [m, n_codes] -> top-k ADC scores
+    ``sum_s table[s, codes[:, s]] + base`` (base defaults to 0)."""
+    m = codes.shape[1]
+    scores = jnp.sum(table[jnp.arange(m)[None, :], codes.astype(jnp.int32)],
+                     axis=1)
+    if base is not None:
+        scores = scores + base
+    vals, idxs = jax.lax.top_k(scores, k)
+    return vals, idxs.astype(jnp.int32)

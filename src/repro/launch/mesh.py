@@ -21,15 +21,31 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_query_mesh(*, max_devices: int | None = None):
-    """1-D ``("data",)`` mesh over the local devices — the serving-side
+def make_query_mesh(*, max_devices: int | None = None,
+                    doc_shards: int | None = None):
+    """``("data",)`` mesh over the local devices — the serving-side
     counterpart of the training meshes above, used by the sharded query
     execution engine (core/engine.py) to data-parallel the query axis.
-    ``max_devices`` restricts the mesh (device-scaling benchmarks)."""
+    ``max_devices`` restricts the mesh (device-scaling benchmarks).
+
+    ``doc_shards`` selects the 2-D ``(query x doc-shard)`` layout
+    ``("data", "docs")``: the query axis data-parallels over the first
+    axis while each ``docs`` group owns one contiguous slice of the
+    document axis (``index.dense.shard_dense_index``), merged across
+    shards by ``core.engine.merge_shard_topk``.  The device count must be
+    divisible by ``doc_shards``."""
     devices = jax.local_devices()
     if max_devices is not None:
         devices = devices[:max(1, min(max_devices, len(devices)))]
-    return jax.make_mesh((len(devices),), ("data",), devices=devices)
+    if doc_shards is None:
+        return jax.make_mesh((len(devices),), ("data",), devices=devices)
+    doc_shards = int(doc_shards)
+    if doc_shards < 1 or len(devices) % doc_shards:
+        raise ValueError(
+            f"doc_shards={doc_shards} must divide the device count "
+            f"{len(devices)}")
+    return jax.make_mesh((len(devices) // doc_shards, doc_shards),
+                         ("data", "docs"), devices=devices)
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

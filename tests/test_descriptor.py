@@ -217,6 +217,53 @@ def test_explain_shows_measured_vs_predicted(env):
 
 
 # ---------------------------------------------------------------------------
+# auto-refit: profile-carried calibration applied by with_profile
+# ---------------------------------------------------------------------------
+
+FIT = {"peak_flops_per_s": 2.0e13, "peak_bytes_per_s": 4.0e11,
+       "gamma": 50.0, "n_records": 6, "rms_log_ratio_error": 0.01}
+
+
+def test_with_profile_auto_refits_from_calibration(tmp_path):
+    path = tmp_path / "p.json"
+    prof = TuningProfile(path)
+    prof.note_calibration(FIT)
+    prof.save()
+    # a fresh descriptor attaching the persisted profile re-prices its
+    # roofline peaks from the stored fit, once
+    prof2 = TuningProfile(path)
+    d = BackendDescriptor.default().with_profile(prof2)
+    assert d.peak_flops_per_s == FIT["peak_flops_per_s"]
+    assert d.peak_bytes_per_s == FIT["peak_bytes_per_s"]
+    assert prof2.pending_fit(d.peak_digest) is None    # marked applied
+    # a second attach of the same (marked) profile is a no-op refit
+    d2 = BackendDescriptor.default().with_profile(prof2)
+    assert d2.peak_digest == d.peak_digest
+    # the applied marker survives persistence
+    prof2.save()
+    prof3 = TuningProfile(path)
+    assert prof3.pending_fit(d.peak_digest) is None
+    assert prof3.info()["calibrated"]
+
+
+def test_with_profile_auto_refit_opt_out():
+    prof = TuningProfile(path=None)
+    prof.note_calibration(FIT)
+    d = BackendDescriptor.default().with_profile(prof, auto_refit=False)
+    assert d.peak_flops_per_s != FIT["peak_flops_per_s"]
+    # the fit stays pending for a future auto-refit attach
+    assert prof.pending_fit(d.peak_digest) == {
+        k: float(v) for k, v in FIT.items()}
+
+
+def test_note_calibration_ignores_malformed_fit():
+    prof = TuningProfile(path=None)
+    prof.note_calibration(None)
+    prof.note_calibration({"peak_flops_per_s": 1.0})   # missing bytes peak
+    assert prof.calibration is None and not prof.dirty
+
+
+# ---------------------------------------------------------------------------
 # calibration fit
 # ---------------------------------------------------------------------------
 

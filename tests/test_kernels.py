@@ -9,6 +9,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.dense_scoring.ops import streaming_dense_topk
 from repro.kernels.dense_scoring.ref import dense_topk_ref
+from repro.kernels.pq_scoring.ops import streaming_pq_topk
+from repro.kernels.pq_scoring.ref import pq_topk_ref
 from repro.kernels.fused_scoring.ops import fused_scoring
 from repro.kernels.fused_scoring.ref import fused_scoring_ref
 from repro.kernels.topk.ops import streaming_topk
@@ -64,6 +66,46 @@ def test_streaming_dense_topk_sweep(n, dim, k, block, with_base):
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
                                atol=1e-5)
     assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
+
+
+@pytest.mark.parametrize("n,m,k,block,with_base",
+                         [(2048, 8, 10, 512, False),
+                          (5000, 8, 32, 512, True),
+                          (700, 4, 16, 256, True),
+                          (4096, 16, 128, 1024, False)])
+def test_streaming_pq_topk_sweep(n, m, k, block, with_base):
+    rng = np.random.default_rng(n + m + k)
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)).astype(np.uint8))
+    table = jnp.asarray(rng.standard_normal((m, 256)).astype(np.float32))
+    base = (jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            if with_base else None)
+    v1, i1 = streaming_pq_topk(codes, table, base, k=k, block=block,
+                               impl="pallas", interpret=True)
+    v2, i2 = pq_topk_ref(codes, table, base, k=k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
+                               atol=1e-5)
+    # the kernel's lexsort finish orders equal-value survivors by lowest
+    # index (lax.top_k's rule), so with distinct scores indices match
+    # position-for-position
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_streaming_pq_topk_duplicate_codes():
+    # every doc in {0,1} code space: massive score ties.  Like the other
+    # streaming kernels, ties deeper than k admit any valid top-k set —
+    # the contract is equal top-k *values* and every returned index
+    # actually scoring its reported value
+    rng = np.random.default_rng(7)
+    codes = jnp.asarray(rng.integers(0, 2, (3000, 8)).astype(np.uint8))
+    table = jnp.asarray(rng.standard_normal((8, 256)).astype(np.float32))
+    v1, i1 = streaming_pq_topk(codes, table, None, k=16, block=512,
+                               impl="pallas", interpret=True)
+    v2, _ = pq_topk_ref(codes, table, None, k=16)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
+                               atol=1e-5)
+    full = np.asarray(table)[np.arange(8), np.asarray(codes)].sum(axis=1)
+    np.testing.assert_allclose(full[np.asarray(i1)], np.asarray(v1),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_streaming_topk_duplicate_values():
