@@ -28,7 +28,7 @@ import jax
 from repro.core import (BackendDescriptor, DenseRerank, DenseRetrieve,
                         Experiment, ExperimentPlan, Extract, FatRetrieve,
                         PrunedRetrieve, Retrieve, ShardedQueryEngine,
-                        optimize_pipeline)
+                        compile_pipeline, raise_ir)
 from repro.core.compiler import Context, JaxBackend, run_pipeline
 from repro.core.data import make_queries
 from repro.launch.mesh import make_query_mesh
@@ -109,7 +109,7 @@ def topk_overlap(A, B, k: int) -> float:
 
 
 def _time_pipeline(pipe, Q, backend, *, optimize, repeats=3):
-    node = optimize_pipeline(pipe, backend) if optimize else pipe
+    node = raise_ir(compile_pipeline(pipe, backend)) if optimize else pipe
     # warm-up (compile)
     R = node.transform(Q, backend=backend, optimize=False)
     jax.block_until_ready(R["scores"])

@@ -9,7 +9,7 @@ side-by-side with Experiment.
 import numpy as np
 
 from repro.core import (Experiment, Extract, JaxBackend, Retrieve, RM3Expand,
-                        format_table, optimize_pipeline)
+                        compile_pipeline, format_table, raise_ir)
 from repro.core.data import make_queries
 from repro.index import build_index, synthesize_corpus, synthesize_topics
 
@@ -33,7 +33,7 @@ def main():
     # 3. the compiler rewrites them against backend capabilities
     for name, pipe in [("cutoff", top10), ("fusion", fusion), ("fat", fat)]:
         trace = []
-        opt = optimize_pipeline(pipe, backend, trace=trace)
+        opt = raise_ir(compile_pipeline(pipe, backend, trace=trace))
         print(f"{name:8s} {pipe!r}\n     -->  {opt!r}"
               f"   (rules: {[t[0] for t in trace]})")
 

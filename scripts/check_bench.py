@@ -159,6 +159,33 @@ def main() -> int:
         print(f"FAIL: two-tenant serve workload did not serve every "
               f"pipeline (starved: {starved})", file=sys.stderr)
         return 1
+    rag = serve.get("rag")
+    if not rag:
+        print("FAIL: serve section has no rag workload", file=sys.stderr)
+        return 1
+    if not rag.get("continuous_beats_sequential_at_saturation"):
+        print("FAIL: rag serve workload: continuous-batched decode did not "
+              f"beat the sequential one-slot baseline at saturation "
+              f"({(rag.get('continuous') or {}).get('decode_tokens_per_s')} "
+              f"vs {(rag.get('sequential') or {}).get('decode_tokens_per_s')}"
+              " tokens/s)", file=sys.stderr)
+        return 1
+    cont = rag.get("continuous") or {}
+    for field in ("ttft_ms", "per_token_ms"):
+        if "p95_ms" not in (cont.get(field) or {}):
+            print(f"FAIL: rag serve workload lacks {field} p95 in its "
+                  "continuous-decode traces", file=sys.stderr)
+            return 1
+    if cont.get("recompiles_since_warmup") != 0:
+        print("FAIL: rag serve workload recompiled after warmup "
+              f"({cont.get('recompiles_since_warmup')}) — decode "
+              "prefill/step must ride the pinned jit-cache entries",
+              file=sys.stderr)
+        return 1
+    if "rag.sat.decode_tokens_per_s" not in serve["gated"]:
+        print("FAIL: serve gated block lacks rag.sat.decode_tokens_per_s",
+              file=sys.stderr)
+        return 1
     at = summary["autotune"]
     for field in ("cold_tune_s", "warm_compile_s", "warm_profile_reuse"):
         if not at.get(field):

@@ -13,9 +13,10 @@ just produced it.
 Compared metrics are the fused-path QPS figures the fusion work optimises
 for (``fusion`` + ``dense`` workloads and the IVF probe path) plus the
 serving trajectory (light-load p95 latency, mid-load and saturation
-goodput, and saturation throughput per serve workload, from the serve
-section's ``gated`` block — saturation goodput is the deadline-aware
-scheduler's headline and is gated direction-aware alongside throughput).  A metric
+goodput, saturation throughput per serve workload, and the RAG decode
+figures — continuous-batched tokens/s higher-is-better, TTFT and
+per-token p95 lower-is-better — all from the serve section's ``gated``
+block, which carries each metric's explicit ``better`` direction).  A metric
 present in both summaries that regressed by more than the threshold fails
 the job — "regressed" is direction-aware (QPS falling, latency rising).
 Metrics only present on one side (new workload, renamed section) are
@@ -166,6 +167,12 @@ def main() -> int:
         print("FAIL: current summary's serve section gates no saturation "
               "goodput metric (did the deadline-aware levels go missing?)",
               file=sys.stderr)
+        return 1
+    if (cur.get("serve") or {}).get("rag") and \
+            "serve.rag.sat.decode_tokens_per_s" not in cur_m:
+        print("FAIL: current summary's serve section has a rag workload "
+              "but gates no decode throughput metric (did bench_rag's "
+              "gated entries go missing?)", file=sys.stderr)
         return 1
     for section in missing_sections(prev, cur):
         print(f"  note: previous artifact predates the {section!r} section; "

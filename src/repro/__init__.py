@@ -1,0 +1,44 @@
+"""repro: declarative IR experimentation, compiled and served (paper repro).
+
+The v1 public surface — everything a README example needs, importable from
+the top-level package:
+
+    from repro import (Experiment, JaxBackend, Retrieve, DenseRerank,
+                       Generate, PipelineServer, ServeConfig)
+
+    be = JaxBackend(build_index(corpus)).register_lm("tiny", lm_cfg)
+    rag = Retrieve("BM25") >> DenseRerank() % 8 >> Generate("tiny")
+    server = PipelineServer(rag, be, ServeConfig.default())
+
+Deeper layers (kernels, engine internals, pass construction) stay under
+their subpackages; this module re-exports only the stable declarative API:
+stage constructors, the compile entry point, the backend and its
+descriptor, the experiment driver, and the serving front door.
+"""
+from repro.core.compiler import JaxBackend, run_pipeline
+from repro.core.data import make_queries
+from repro.core.descriptor import BackendDescriptor
+from repro.core.experiment import Experiment, format_table
+from repro.core.ir import Schema, SchemaError, lower, raise_ir
+from repro.core.passes import compile_pipeline, explain_pipeline
+from repro.core.stages import (DenseRerank, DenseRetrieve, Extract,
+                               FatRetrieve, Generate, LTRRerank,
+                               MultiRetrieve, Retrieve, RM3Expand,
+                               SDMRewrite, StemRewrite)
+from repro.serve.config import ServeConfig
+from repro.serve.server import MultiPipelineServer, PipelineServer
+
+__all__ = [
+    # backend + compilation
+    "JaxBackend", "BackendDescriptor", "compile_pipeline",
+    "explain_pipeline", "run_pipeline", "lower", "raise_ir",
+    "Schema", "SchemaError",
+    # data + evaluation
+    "make_queries", "Experiment", "format_table",
+    # stage constructors
+    "Retrieve", "MultiRetrieve", "FatRetrieve", "DenseRetrieve",
+    "DenseRerank", "LTRRerank", "Extract", "RM3Expand", "SDMRewrite",
+    "StemRewrite", "Generate",
+    # serving
+    "PipelineServer", "MultiPipelineServer", "ServeConfig",
+]

@@ -15,11 +15,10 @@ from repro.core.experiment import Experiment, format_table  # noqa: F401
 from repro.core.ir import Op, Schema, SchemaError, lower, raise_ir  # noqa: F401
 from repro.core.passes import compile_pipeline, explain_pipeline  # noqa: F401
 from repro.core.plan import ArtifactCache, ExperimentPlan  # noqa: F401
-from repro.core.rewrite import optimize_pipeline  # noqa: F401
 from repro.core.stages import (DenseRerank, DenseRetrieve,  # noqa: F401
                                Extract, FatRetrieve, FusedDenseRerank,
                                FusedDenseRetrieve, FusedFatRetrieve,
-                               FusedTopKRetrieve, LTRRerank, MultiRetrieve,
-                               PrunedRetrieve, Retrieve, RM3Expand,
-                               SDMRewrite, StemRewrite)
+                               FusedTopKRetrieve, Generate, LTRRerank,
+                               MultiRetrieve, PrunedRetrieve, Retrieve,
+                               RM3Expand, SDMRewrite, StemRewrite)
 from repro.core.transformer import Transformer  # noqa: F401

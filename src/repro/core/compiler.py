@@ -22,14 +22,13 @@ import dataclasses
 import hashlib
 import itertools
 import os
-import warnings
 import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.descriptor import DEFAULT_CAPABILITIES, BackendDescriptor
+from repro.core.descriptor import BackendDescriptor
 from repro.core.engine import ShardedQueryEngine, StageProgram
 from repro.core.ir import Op, lower
 from repro.core.transformer import Transformer
@@ -47,21 +46,21 @@ _BACKEND_UID = itertools.count()
 
 class JaxBackend:
     """Execution backend over the JAX-native index (capability descriptor +
-    sharded bucketed query execution + query embedding)."""
+    sharded bucketed query execution + query embedding + registered LMs
+    for the generate stage).
 
-    #: capabilities consulted by the rewrite/fusion passes (paper §4: BMW
-    #: cutoff on Anserini; fat postings on Terrier — our backend supports
-    #: all, plus the Pallas kernel lowerings the fusion pass cost-gates:
-    #: fused_topk/fused_scoring for the sparse stage, dense_topk/fused_dense
-    #: for the dense second stage).  The full optimisation surface now lives
-    #: on ``self.descriptor`` (a BackendDescriptor); this alias and the
-    #: ``capabilities=`` constructor arg survive as compatibility shims.
-    CAPABILITIES = DEFAULT_CAPABILITIES
+    The optimisation surface consulted by the rewrite/fusion passes (paper
+    §4: BMW cutoff on Anserini; fat postings on Terrier — our backend
+    supports all, plus the Pallas kernel lowerings the fusion pass
+    cost-gates) lives on ``self.descriptor`` (a
+    :class:`~repro.core.descriptor.BackendDescriptor`); pass
+    ``descriptor=BackendDescriptor.default(capability_set)`` to restrict
+    it.  The pre-descriptor ``capabilities=`` constructor kwarg was removed
+    after its deprecation cycle."""
 
     def __init__(self, index: InvertedIndex, dense: DenseIndex | None = None,
                  *, default_k: int = 1000, query_chunk: int = 16,
-                 stop_df_fraction: float = 0.1,
-                 capabilities: frozenset | None = None, seed: int = 0,
+                 stop_df_fraction: float = 0.1, seed: int = 0,
                  descriptor: BackendDescriptor | None = None,
                  sharded: bool | None = None,
                  engine: ShardedQueryEngine | None = None,
@@ -73,18 +72,13 @@ class JaxBackend:
         self.uid = next(_BACKEND_UID)
         self.default_k = min(default_k, index.n_docs)
         self.query_chunk = query_chunk
-        if capabilities is not None:
-            if descriptor is not None:
-                raise TypeError(
-                    "pass either descriptor= or the deprecated "
-                    "capabilities=, not both")
-            warnings.warn(
-                "JaxBackend(capabilities=...) is deprecated; pass "
-                "descriptor=BackendDescriptor.default(capabilities) "
-                "instead", DeprecationWarning, stacklevel=2)
-            descriptor = BackendDescriptor.default(frozenset(capabilities))
         self.descriptor = (descriptor if descriptor is not None
                            else BackendDescriptor.default())
+        #: name -> (LMConfig, params): decoder LMs the generate stage
+        #: resolves by name.  Registration keeps Generate's params scalar
+        #: (the model *name* is the content key, not the weight arrays), so
+        #: CSE / serving digests / engine jit keys stay stable.
+        self._lms: dict = {}
         # stopwords are removed at index time (build_index), so the global
         # max posting-list length is the safe static gather width
         lens = np.diff(np.asarray(index.term_start))
@@ -126,9 +120,33 @@ class JaxBackend:
 
     @property
     def capabilities(self) -> frozenset:
-        """Deprecated alias for ``self.descriptor.capabilities`` (the flat
-        frozenset the passes used to string-probe)."""
+        """Read-only alias for ``self.descriptor.capabilities`` (the flat
+        capability set the rewrite passes probe)."""
         return self.descriptor.capabilities
+
+    # -- generate-stage LMs --------------------------------------------------
+    def register_lm(self, name: str, cfg, params=None, *, seed: int = 0):
+        """Register a decoder LM under ``name`` for the generate stage.
+
+        ``cfg`` is a :class:`repro.models.transformer_lm.LMConfig`;
+        ``params`` defaults to a fresh :func:`init_params` draw from
+        ``seed``.  The generate stage refers to the model by name only, so
+        its IR params stay scalar and content-addressable."""
+        from repro.models import transformer_lm as tlm
+        if params is None:
+            params = tlm.init_params(cfg, jax.random.key(seed))
+        self._lms[name] = (cfg, params)
+        return self
+
+    def lm(self, name: str):
+        """(cfg, params) of a registered LM; KeyError names the gap."""
+        try:
+            return self._lms[name]
+        except KeyError:
+            raise KeyError(
+                f"no LM registered as {name!r} on this backend "
+                f"(have {sorted(self._lms)}); call "
+                f"backend.register_lm(name, cfg) first") from None
 
     @property
     def ivf(self):

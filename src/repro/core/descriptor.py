@@ -19,8 +19,9 @@ backend *as data*:
                                whose estimated margin is within a band).
 
 Passes receive the descriptor at build time (``default_passes(desc)``);
-``JaxBackend`` exposes one as ``backend.descriptor`` and keeps
-``capabilities=`` as a deprecation shim.
+``JaxBackend`` exposes one as ``backend.descriptor`` (the flat
+``capabilities=`` ctor kwarg is gone; ``backend.capabilities`` survives
+only as a read-only alias of ``descriptor.capabilities``).
 
 :class:`TuningProfile` is the persistence layer: an on-disk JSON store of
 fusion-gate decisions, hardened the same way ``plan.ArtifactCache`` is —

@@ -303,6 +303,35 @@ class ShardedQueryEngine:
                              f"{nq} queries (ladder {self.ladder})")
         return self._run_plan(program, args, ((0, nq, bucket),))
 
+    def run_pinned(self, program: StageProgram, *args,
+                   donate_argnums: tuple = ()):
+        """Execute a *pinned-shape* program (the prefill / decode-step
+        bodies of the generate stage) through the persistent jit cache: no
+        vmap, no bucket padding — the caller guarantees every array shape
+        is drawn from a finite, warmed set (decode batch = a ladder rung,
+        prompt/decode lengths fixed by the stage's static params).  The
+        entry is keyed ``(key, "pinned", leaf shapes)`` in the same LRU and
+        counted by the same compile counters as the bucketed entries, so
+        the recompiles-since-warmup invariant sees pinned programs exactly
+        like vmapped ones.  ``donate_argnums`` lets a decode step donate
+        its KV-cache buffers (the cache is threaded, never reread)."""
+        leaves = jax.tree.leaves(args)
+        sig = tuple((tuple(getattr(x, "shape", ())),
+                     str(getattr(x, "dtype", type(x).__name__)))
+                    for x in leaves)
+        self.n_dispatches += 1
+        if program.key is None:
+            return jax.jit(program.fn, donate_argnums=donate_argnums)(*args)
+        jk = (program.key, "pinned", sig)
+        vf = self._jit_cache.get(jk)
+        if vf is None:
+            vf = jax.jit(program.fn, donate_argnums=donate_argnums)
+            self._jit_cache.put(jk, vf)
+            ck = (program.key, "pinned")
+            self.compiles.put(ck, (self.compiles.get(ck, 0) or 0) + 1)
+            self.n_compiles_total += 1
+        return vf(*args)
+
     def _run_plan(self, program: StageProgram, args, plan):
         key, fn = program.key, program.fn
         sig = tuple((tuple(a.shape[1:]), str(a.dtype)) for a in args)

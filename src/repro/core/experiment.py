@@ -26,8 +26,8 @@ import jax
 
 from repro.core import measures as M
 from repro.core.compiler import Context, JaxBackend, run_pipeline
+from repro.core.passes import compile_pipeline
 from repro.core.plan import ArtifactCache, ExperimentPlan
-from repro.core.rewrite import optimize_pipeline
 from repro.core.transformer import Transformer
 
 
@@ -87,7 +87,7 @@ def _experiment_sequential(pipelines, topics, qrels, metrics, backend, names,
     ctx = Context(backend) if share_cache else None
     rows, results = [], []
     for name, pipe in zip(names, pipelines):
-        node = optimize_pipeline(pipe, backend) if optimize else pipe
+        node = compile_pipeline(pipe, backend) if optimize else pipe
         if measure_time:
             # warm-up with a throwaway memo so the timed region below
             # measures steady-state retrieval, not JIT compilation

@@ -11,9 +11,10 @@ all agree on.  This module is the single representation they share:
   instead of mutating, so schema/key caches stay sound and CSE can share
   instances freely.
 * :class:`Schema` — the type of an op's output stream: ``Q`` (query
-  rewrite, the R stream passes through), ``R`` (ranked results), or ``F``
-  (ranked results carrying feature columns), plus the *static* result depth
-  ``k`` and feature width where they are known at compile time.
+  rewrite, the R stream passes through), ``R`` (ranked results), ``F``
+  (ranked results carrying feature columns), or ``A`` (answer-bearing
+  results: ranked results plus generated token columns), plus the *static*
+  result depth ``k`` and feature width where they are known at compile time.
 * ``lower`` / ``raise_ir`` — convert a ``Transformer`` tree to IR and back.
   The round trip preserves ``key()`` exactly: ``Op.key()`` is computed with
   the same canonicalisation as ``Transformer.key()``
@@ -44,7 +45,9 @@ class Schema:
     """Static type of an op's output stream.
 
     ``out``  — "Q" (no result stream produced; R passes through), "R"
-               (ranked results), "F" (results + feature columns).
+               (ranked results), "F" (results + feature columns), "A"
+               (answer-bearing results: R plus generated token columns —
+               terminal; no ranking stage may consume it).
     ``k``    — static result depth, or None where unknown at compile time.
     ``width``— static feature-column count, or None where unknown.
     ``reads_results`` — whether executing the op observes the incoming R

@@ -1,6 +1,6 @@
 """Pass-manager compiler over the typed pipeline IR (paper §4).
 
-Replaces the ad-hoc fixpoint rewriter (``core/rewrite.py``, now a shim) with
+Replaces the ad-hoc fixpoint rewriter (the late ``core/rewrite.py``) with
 an explicit ordered pipeline of IR-to-IR passes:
 
   canonicalise        — re-establish the canonical variadic forms (flatten
@@ -33,10 +33,11 @@ an explicit ordered pipeline of IR-to-IR passes:
                         the unfused interpreter path is kept
   schema_check        — re-infer/validate schemas on the final graph
 
-``compile_pipeline`` is the single entry point the executor
-(``compiler.run_pipeline``), the planner (``plan.ExperimentPlan``) and the
-``optimize_pipeline`` shim all go through; ``explain_pipeline`` renders the
-IR before/after each pass for ``pipeline.explain()``.
+``compile_pipeline`` is the single optimization entry point — the executor
+(``compiler.run_pipeline``), the planner (``plan.ExperimentPlan``), the
+experiment/tuning drivers and the serving layer all go through it;
+``explain_pipeline`` renders the IR before/after each pass for
+``pipeline.explain()``.
 """
 from __future__ import annotations
 
@@ -69,12 +70,26 @@ def _carry(s_in: Schema | None):
     return (None, None) if s_in is None else (s_in.k, s_in.width)
 
 
+def _reject_answer(st: Schema, where: str, child: Op) -> None:
+    """A is terminal: no ranking combinator may consume an answer stream."""
+    if st.out == "A":
+        raise SchemaError(
+            f"{where} typed against an answer-bearing (A) expression "
+            f"({child.label()}): generate is terminal — no ranking stage "
+            f"may consume its output")
+
+
 def _stage_schema(op: Op, s_in: Schema | None, backend,
                   annot: dict | None) -> Schema:
     """Schema of ``op``'s output stream given the schema of the incoming R
     stream (None = statically unknown / absent)."""
     kind = op.kind
     k_in, w_in = _carry(s_in)
+    if s_in is not None and s_in.out == "A":
+        raise SchemaError(
+            f"stage {op.label()} typed against an answer-bearing (A) "
+            f"stream: generate is terminal — no stage may consume its "
+            f"output")
     if kind in _RETRIEVER_KINDS:
         k = op.params.get("k") or (backend.default_k if backend else None)
         out = Schema("R", k, None, False)
@@ -93,6 +108,16 @@ def _stage_schema(op: Op, s_in: Schema | None, backend,
     elif kind == "dense_rerank":
         out = Schema("F" if s_in is not None and s_in.out == "F" else "R",
                      k_in, w_in, True)
+    elif kind == "generate":
+        if s_in is None:
+            raise SchemaError(
+                f"generate ({op.label()}) typed against a pure Q -> Q "
+                f"expression: prompt assembly reads ranked results, so "
+                f"generate may only follow an R-producing expression")
+        # A: answer-bearing results.  k carries the (static) result depth
+        # the prompt reads; width carries the static decode length — both
+        # fixed at compile time so the bucket ladder stays recompile-free.
+        out = Schema("A", k_in, op.params["max_new_tokens"], True)
     elif kind == "then":
         r_sch = s_in
         child_outs = []
@@ -114,20 +139,30 @@ def _stage_schema(op: Op, s_in: Schema | None, backend,
                 f"rank cutoff %{op.params['k']} typed against a pure "
                 f"Q -> Q expression ({op.inputs[0].label()}): a cutoff may "
                 f"only attach to an R-producing expression")
+        if st.out == "A":
+            raise SchemaError(
+                f"rank cutoff %{op.params['k']} typed against an "
+                f"answer-bearing (A) expression ({op.inputs[0].label()}): "
+                f"generate is terminal — apply the cutoff before it")
         K = op.params["k"]
         out = Schema(st.out, K if st.k is None else min(K, st.k), st.width,
                      st.reads_results)
     elif kind == "scale":
         st = _stage_schema(op.inputs[0], s_in, backend, annot)
+        _reject_answer(st, "score scale", op.inputs[0])
         out = Schema(st.out, st.k, st.width, st.reads_results)
     elif kind == "linear":
         sts = [_stage_schema(c, s_in, backend, annot) for c in op.inputs]
+        for st, c in zip(sts, op.inputs):
+            _reject_answer(st, "linear combination", c)
         ks = [st.k for st in sts]
         out = Schema("R", None if any(k is None for k in ks) else max(ks),
                      None, any(st.reads_results for st in sts))
     elif kind in ("setop", "concat"):
         s1 = _stage_schema(op.inputs[0], s_in, backend, annot)
         s2 = _stage_schema(op.inputs[1], s_in, backend, annot)
+        _reject_answer(s1, f"{kind} operand", op.inputs[0])
+        _reject_answer(s2, f"{kind} operand", op.inputs[1])
         if kind == "setop" and op.params.get("op") == "intersect":
             k = s1.k
         else:
@@ -135,6 +170,8 @@ def _stage_schema(op: Op, s_in: Schema | None, backend,
         out = Schema("R", k, None, s1.reads_results or s2.reads_results)
     elif kind == "feature_union":
         sts = [_stage_schema(c, s_in, backend, annot) for c in op.inputs]
+        for st, c in zip(sts, op.inputs):
+            _reject_answer(st, "feature union", c)
         widths = [st.width if st.width else 1 for st in sts]
         out = Schema("F", sts[0].k,
                      None if any(st.out == "F" and st.width is None
@@ -431,7 +468,7 @@ def scale_fold(op, pctx):
 
 class RewritePass(Pass):
     """Bottom-up application of the equivalence rules to a fixpoint — the
-    IR re-expression of the old ``rewrite.optimize_pipeline`` loop.
+    IR re-expression of the old ad-hoc rewriter loop.
 
     Capability-gated rules are filtered ONCE against the backend descriptor
     at pass construction; the match loop never probes the backend."""

@@ -462,6 +462,129 @@ class LTRRerank(Transformer):
         self.version += 1
 
 
+# ---------------------------------------------------------------------------
+# generation (RAG answer stage)
+# ---------------------------------------------------------------------------
+
+def assemble_prompt_fn(index, *, vocab: int, max_prompt_len: int,
+                       prompt_docs: int):
+    """Per-query prompt assembler ``(terms, weights, docids) -> [P] int32``.
+
+    Deterministic static-shape assembly: the query's terms followed by the
+    forward-index terms of the top ``prompt_docs`` documents, mapped into
+    the LM vocab (ids 0/1 reserved for pad/bos), compacted to the front and
+    *cyclically repeated* to fill exactly ``max_prompt_len`` positions — a
+    fixed prompt length means one prefill shape per decode batch size, so
+    the bucket ladder keeps generation recompile-free."""
+    fwd_start = index.fwd_start
+    fwd_terms = index.fwd_terms
+    max_fwd = int(index.max_fwd_len)
+    n_terms = int(fwd_terms.shape[0])
+    P = int(max_prompt_len)
+
+    def one(terms, weights, docids):
+        d = docids[:prompt_docs]
+        d0 = jnp.maximum(d, 0)
+        start = fwd_start[d0]
+        count = fwd_start[d0 + 1] - start
+        win = jnp.arange(max_fwd)
+        idx = start[:, None] + win[None, :]
+        dterm = fwd_terms[jnp.clip(idx, 0, n_terms - 1)]
+        dvalid = (win[None, :] < count[:, None]) & (d >= 0)[:, None]
+        dterm = jnp.where(dvalid, dterm, -1)
+        cand = jnp.concatenate([terms.astype(jnp.int32),
+                                dterm.reshape(-1).astype(jnp.int32)])
+        valid = cand >= 0
+        tok = (2 + jnp.maximum(cand, 0) % (vocab - 2)).astype(jnp.int32)
+        pos = jnp.cumsum(valid) - 1
+        slot = jnp.where(valid & (pos < P), pos, P)
+        prompt = jnp.zeros((P + 1,), jnp.int32).at[slot].set(tok)[:P]
+        n = jnp.clip(jnp.sum(valid), 1, P)
+        fill = jnp.arange(P)
+        return jnp.where(fill < n, prompt, prompt[fill % n])
+
+    return one
+
+
+def greedy_generate_fn(cfg, *, max_prompt_len: int, max_new_tokens: int):
+    """Batched oracle decode ``(params, prompts [B, P]) -> tokens [B, T]``:
+    one prefill over the prompt block, then a ``lax.scan`` of greedy
+    decode steps against a [B, P+T] KV cache.  Same argmax/cache math as
+    the serving-side ragged decode (``serve/batching.py``), so served
+    output is comparable token-for-token."""
+    from repro.models import transformer_lm as tlm
+    P, T = int(max_prompt_len), int(max_new_tokens)
+
+    def gen(params, prompts):
+        B = prompts.shape[0]
+        cache = tlm.init_kv_cache(cfg, B, P + T)
+        logits, cache = tlm.prefill(cfg, params, prompts, cache)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def body(carry, t):
+            tok, cache = carry
+            logits, cache = tlm.decode_step(cfg, params, tok[:, None],
+                                            cache, t)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        (_, _), rest = jax.lax.scan(
+            body, (first, cache), P + jnp.arange(T - 1, dtype=jnp.int32))
+        return jnp.concatenate([first[:, None], rest.T], axis=1)
+
+    return gen
+
+
+class Generate(Transformer):
+    """RAG answer stage (R -> A): assemble the top-``prompt_docs`` documents
+    into a fixed-length prompt and decode ``max_new_tokens`` greedy tokens
+    with the named backend-registered LM (``backend.register_lm``).
+
+    All params are scalar statics — model *name*, prompt/decode lengths —
+    so the op stays content-addressable (CSE, serving digests, engine jit
+    keys) and every compiled shape is fixed at compile time.  The output is
+    the answer-bearing A relation: the incoming ranking plus a
+    ``tokens [NQ, max_new_tokens]`` column block; A is terminal, no ranking
+    stage may consume it (core/passes.py schema rules)."""
+    kind = "generate"
+    out_kind = "A"
+    reads_results = True
+
+    def __init__(self, model: str, max_new_tokens: int = 16,
+                 max_prompt_len: int = 64, prompt_docs: int = 4):
+        super().__init__(model=model, max_new_tokens=int(max_new_tokens),
+                         max_prompt_len=int(max_prompt_len),
+                         prompt_docs=int(prompt_docs))
+
+    def assemble(self, ctx, Q, R):
+        """Prompts [NQ, max_prompt_len] for the incoming ranking (shared by
+        the offline path below and the server's decode pool)."""
+        be = ctx.backend
+        cfg, _ = be.lm(self.params["model"])
+        one = assemble_prompt_fn(
+            be.index, vocab=cfg.vocab,
+            max_prompt_len=self.params["max_prompt_len"],
+            prompt_docs=self.params["prompt_docs"])
+        return be.vmap_queries(one, Q, R["docids"], key=self.key())
+
+    def execute(self, ctx, Q, R):
+        assert R is not None, "Generate needs retrieved results"
+        be = ctx.backend
+        cfg, params = be.lm(self.params["model"])
+        prompts = self.assemble(ctx, Q, R)
+        gen = greedy_generate_fn(
+            cfg, max_prompt_len=self.params["max_prompt_len"],
+            max_new_tokens=self.params["max_new_tokens"])
+        if be.engine is not None:
+            from repro.core.engine import StageProgram
+            prog = StageProgram(key=(be.uid, self.key(), "generate"), fn=gen)
+            tokens = be.engine.run_pinned(prog, params, prompts)
+        else:
+            tokens = gen(params, prompts)
+        return Q, {"qid": Q["qid"], "docids": R["docids"],
+                   "scores": R["scores"], "tokens": tokens}
+
+
 class DenseRerank(Transformer):
     """Dense (embedding) re-scoring of the candidate set — the neural
     re-ranker slot (CEDR/BERT in Listing 1), backed by the dense index."""

@@ -18,7 +18,7 @@ import numpy as np
 from repro.core import measures as M
 from repro.core.compiler import Context, JaxBackend, run_pipeline
 from repro.core.data import make_queries
-from repro.core.rewrite import optimize_pipeline
+from repro.core.passes import compile_pipeline
 from repro.core.transformer import Transformer
 
 
@@ -36,7 +36,7 @@ def GridSearch(build: Callable[..., Transformer], grid: dict[str, Sequence],
     for values in itertools.product(*grid.values()):
         params = dict(zip(names, values))
         pipe = build(**params)
-        node = optimize_pipeline(pipe, backend) if optimize else pipe
+        node = compile_pipeline(pipe, backend) if optimize else pipe
         R = run_pipeline(node, topics, backend=backend, optimize=False,
                          ctx=ctx)
         score = M.compute_measures(R, qrels, [metric])[metric]

@@ -31,8 +31,20 @@ class Request:
 
 
 class ContinuousBatcher:
+    """Iteration-level decode pool.
+
+    When an ``engine`` (a :class:`~repro.core.engine.ShardedQueryEngine`)
+    and a ``key`` are supplied, the prefill and decode-step bodies run
+    through ``engine.run_pinned`` — the engine's persistent jit cache —
+    so the serving layer's recompiles-since-warmup invariant covers them:
+    both bodies have *fixed* shapes (prompt length and pool size are
+    static), so a warmed server takes zero decode-path compiles.  Without
+    an engine the batcher owns its jits (standalone/offline use).
+    """
+
     def __init__(self, cfg: tlm.LMConfig, params, *, slots: int = 4,
-                 max_len: int = 256, eos_id: int | None = None):
+                 max_len: int = 256, eos_id: int | None = None,
+                 engine=None, key=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -44,49 +56,77 @@ class ContinuousBatcher:
         self.last_token = np.zeros((slots, 1), np.int32)
         self.queue: deque[Request] = deque()
         self.completed: list[Request] = []
+        self.n_decode_steps = 0
 
-        # one jitted ragged decode step for the pool
+        # one ragged decode step for the whole pool
         def step(params, tokens, cache, positions, active):
             logits, cache = _ragged_decode(cfg, params, tokens, cache, positions)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = jnp.where(active, nxt, 0)
             return nxt, cache
 
-        self._step = jax.jit(step, donate_argnums=2)
-
         def prefill_one(params, tokens, cache, slot, length):
             return _slot_prefill(cfg, params, tokens, cache, slot, length)
 
-        self._prefill = jax.jit(prefill_one, donate_argnums=2,
-                                static_argnames=())
+        if engine is not None:
+            from repro.core.engine import StageProgram
+            step_prog = StageProgram(key=(key, "decode_step"), fn=step)
+            pre_prog = StageProgram(key=(key, "decode_prefill"),
+                                    fn=prefill_one)
+            self._step = lambda *a: engine.run_pinned(
+                step_prog, *a, donate_argnums=(2,))
+            self._prefill = lambda *a: engine.run_pinned(
+                pre_prog, *a, donate_argnums=(2,))
+        else:
+            self._step = jax.jit(step, donate_argnums=2)
+            self._prefill = jax.jit(prefill_one, donate_argnums=2)
 
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self):
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                P = len(req.prompt)
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, self.cache = self._prefill(
-                    self.params, toks, self.cache, jnp.int32(s), jnp.int32(P))
-                first = int(jnp.argmax(logits))
-                req.generated.append(first)
-                self.slot_req[s] = req
-                self.positions[s] = P
-                self.last_token[s, 0] = first
+    def free_slots(self) -> int:
+        return sum(1 for r in self.slot_req if r is None)
 
-    def step(self):
-        """Admit + one decode step for all active slots."""
-        self._admit()
+    def active_slots(self) -> int:
+        return self.slots - self.free_slots()
+
+    def prefill_request(self, req: Request) -> int:
+        """Place ``req`` into a free slot: prefill its prompt into the
+        slot's KV-cache rows and record the first generated token.  The
+        caller (the server's decode pump) owns admission policy; here we
+        only require a free slot."""
+        for s in range(self.slots):
+            if self.slot_req[s] is None:
+                break
+        else:
+            raise RuntimeError("prefill_request with no free slot")
+        P = len(req.prompt)
+        toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
+        logits, self.cache = self._prefill(
+            self.params, toks, self.cache, jnp.int32(s), jnp.int32(P))
+        first = int(jnp.argmax(logits))
+        req.generated.append(first)
+        self.slot_req[s] = req
+        self.positions[s] = P
+        self.last_token[s, 0] = first
+        return s
+
+    def _admit(self):
+        while self.queue and self.free_slots():
+            self.prefill_request(self.queue.popleft())
+
+    def step_active(self) -> list[Request]:
+        """One decode step over the currently active slots (no admission).
+        Returns the requests that finished on this step."""
         active = np.array([r is not None for r in self.slot_req])
         if not active.any():
-            return False
+            return []
         nxt, self.cache = self._step(
             self.params, jnp.asarray(self.last_token), self.cache,
             jnp.asarray(self.positions), jnp.asarray(active))
+        self.n_decode_steps += 1
         nxt = np.asarray(nxt)
+        finished: list[Request] = []
         for s, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -99,8 +139,25 @@ class ContinuousBatcher:
                     self.positions[s] >= self.max_len - 1):
                 req.done = True
                 self.completed.append(req)
+                finished.append(req)
                 self.slot_req[s] = None
-        return True
+        return finished
+
+    def step(self):
+        """Admit + one decode step for all active slots."""
+        self._admit()
+        return bool(self.step_active()) or any(
+            r is not None for r in self.slot_req)
+
+    def reset(self):
+        """Forget all slot/queue state (the KV cache itself needs no
+        clearing: the attention mask only reads positions a live request's
+        prefill wrote).  Used after warmup's dummy prefill/decode."""
+        self.slot_req = [None] * self.slots
+        self.positions = np.zeros(self.slots, np.int32)
+        self.last_token = np.zeros((self.slots, 1), np.int32)
+        self.queue.clear()
+        self.completed = []
 
     def run_to_completion(self, max_steps: int = 10000):
         steps = 0

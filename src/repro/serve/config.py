@@ -13,30 +13,18 @@ shared across servers, logged, and diffed:
                      EDF shed-before-execute, service-time EWMA smoothing),
 * **lanes**        — weighted-fair-queueing priority lanes,
 * **caching**      — the stage-result cache bound and per-stage writes,
+* **decode**       — the generate stage's decode-slot pool size,
 * **tracing**      — per-stage timing and the trace-ring capacity.
 
 Construction mirrors the descriptor idiom: ``ServeConfig.default()`` plus
-chained ``with_*()`` builders returning new frozen values.  The legacy
-kwargs survive on ``PipelineServer`` as a ``DeprecationWarning`` shim
-(passing both a config and legacy kwargs is a ``TypeError``).
+chained ``with_*()`` builders returning new frozen values.  The config is
+the only constructor surface — the pre-config loose-kwarg shim was removed
+after its deprecation cycle, so unknown kwargs fail as a plain
+``TypeError`` from the signature itself.
 """
 from __future__ import annotations
 
 import dataclasses
-
-#: legacy PipelineServer kwarg -> ServeConfig field (the deprecation shim's
-#: translation table; also what the TypeError names on a mixed call)
-LEGACY_KWARGS = {
-    "optimize": "optimize",
-    "max_queue": "max_queue",
-    "max_wait_ms": "max_wait_ms",
-    "max_batch": "max_batch",
-    "cache_entries": "cache_entries",
-    "cache_stages": "cache_stages",
-    "default_timeout_ms": "default_timeout_ms",
-    "trace_stages": "trace_stages",
-    "trace_capacity": "trace_capacity",
-}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +60,11 @@ class ServeConfig:
     # -- stage-result cache -------------------------------------------------
     cache_entries: int | None = 4096
     cache_stages: bool = True
+    # -- decode (generate-stage serving) --------------------------------------
+    #: KV-cache slots per generate tenant's decode pool: the iteration-level
+    #: scheduler admits up to this many concurrent decodes; each slot is one
+    #: row of the block-allocated cache
+    decode_slots: int = 8
     # -- tracing ------------------------------------------------------------
     trace_stages: bool = False
     trace_capacity: int = 2048
@@ -89,6 +82,8 @@ class ServeConfig:
                              f"lanes {names}")
         if not 0.0 < self.service_ewma_alpha <= 1.0:
             raise ValueError("service_ewma_alpha must be in (0, 1]")
+        if self.decode_slots < 1:
+            raise ValueError("decode_slots must be >= 1")
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -143,6 +138,11 @@ class ServeConfig:
             kw["cache_stages"] = bool(cache_stages)
         return self.replace(**kw)
 
+    def with_decode(self, slots: int) -> "ServeConfig":
+        """Decode-pool size for generate-stage tenants (KV-cache slots the
+        iteration-level scheduler fills between decode steps)."""
+        return self.replace(decode_slots=int(slots))
+
     def with_tracing(self, stages: bool | None = None,
                      *, capacity: int | None = None) -> "ServeConfig":
         kw: dict = {}
@@ -160,27 +160,3 @@ class ServeConfig:
         out = dataclasses.asdict(self)
         out["lanes"] = [list(p) for p in self.lanes]
         return out
-
-
-def config_from_legacy_kwargs(config: "ServeConfig | None",
-                              legacy: dict) -> "ServeConfig":
-    """Resolve the (config, legacy kwargs) pair a PipelineServer call
-    presented: legacy kwargs alone build a config with a
-    ``DeprecationWarning``; both at once is a ``TypeError`` (two sources of
-    truth); neither is the default config."""
-    unknown = sorted(set(legacy) - set(LEGACY_KWARGS))
-    if unknown:
-        raise TypeError(f"unknown PipelineServer kwargs: {unknown}")
-    if legacy and config is not None:
-        raise TypeError(
-            f"PipelineServer got both config=ServeConfig(...) and legacy "
-            f"kwargs {sorted(legacy)}; fold them into the config "
-            f"(ServeConfig.with_* builders)")
-    if legacy:
-        import warnings
-        warnings.warn(
-            f"PipelineServer({', '.join(sorted(legacy))}=...) kwargs are "
-            f"deprecated; pass config=ServeConfig.default(...) instead",
-            DeprecationWarning, stacklevel=3)
-        return ServeConfig(**{LEGACY_KWARGS[k]: v for k, v in legacy.items()})
-    return config if config is not None else ServeConfig()

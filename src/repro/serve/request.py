@@ -58,6 +58,9 @@ class RequestTrace:
     tenant: str = ""                # pipeline (tenant) it executed under
     cross_prefix_hit: bool = False  # cache hit written by another pipeline
     stage_ms: tuple = ()            # ((stage label, ms), ...) of its batch
+    # -- decode (generate-stage requests only; zero otherwise) --------------
+    ttft_ms: float = 0.0            # submit -> first generated token
+    n_tokens: int = 0               # tokens decoded for this request
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

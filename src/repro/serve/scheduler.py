@@ -52,6 +52,12 @@ Admission control is a bounded queue: ``submit`` raises
 :class:`~repro.serve.request.ServerOverloaded` rather than growing a
 backlog nobody will be served from before their deadline.
 
+For generate-stage pipelines the scheduler also owns the *decode* queue —
+iteration-level scheduling: a request that finished its retrieval prefix
+and assembled a prompt waits here until the decode pool frees a KV-cache
+slot, and the server admits from this queue *between decode steps*
+(``decode_take``), EDF-ordered so urgent answers claim slots first.
+
 The scheduler is clock-driven and thread-safe but owns no thread itself —
 ``PipelineServer.step()`` (or its serving thread) pulls batches; tests
 drive it synchronously with ``drain=True``.
@@ -133,6 +139,12 @@ class MicroBatchScheduler:
         self.n_rejected = 0
         self.n_shed_submit = 0
         self.n_shed_queue = 0
+        #: decode-side EDF queue: (deadline key, seq, request) of requests
+        #: whose retrieval prefix is done and whose prompt awaits a free
+        #: KV-cache slot in the decode pool
+        self._decode_heap: list = []
+        self.n_decode_submitted = 0
+        self.n_decode_taken = 0
 
     # -- feedback ------------------------------------------------------------
     def _ewma(self, old: float | None, new: float) -> float:
@@ -410,6 +422,33 @@ class MicroBatchScheduler:
                     wait = remaining if wait is None else min(wait, remaining)
                 self._cv.wait(wait)
 
+    # -- decode-side (iteration-level) queue ---------------------------------
+    def decode_submit(self, req: ServeRequest) -> None:
+        """Queue a retrieval-complete request for a decode slot.  No
+        bounded-queue check: the request was already admitted at the door
+        and holds no ladder slot while waiting here."""
+        with self._cv:
+            self._seq += 1
+            dl = _INF if req.deadline is None else req.deadline
+            heapq.heappush(self._decode_heap, (dl, self._seq, req))
+            self.n_decode_submitted += 1
+
+    def decode_take(self, n: int) -> list:
+        """Admit up to ``n`` requests into freed decode slots, most urgent
+        deadline first — called between decode steps, which is what makes
+        the decode loop iteration-level rather than run-to-completion."""
+        out: list = []
+        with self._cv:
+            while self._decode_heap and len(out) < n:
+                _, _, req = heapq.heappop(self._decode_heap)
+                self.n_decode_taken += 1
+                out.append(req)
+        return out
+
+    def decode_pending(self) -> int:
+        with self._cv:
+            return len(self._decode_heap)
+
     def stats(self) -> dict:
         with self._cv:
             S = self._service_ewma
@@ -434,6 +473,9 @@ class MicroBatchScheduler:
                                  else round(1000.0 * self._slot_ewma, 3)),
                 "arrival_gap_ewma_ms": (None if gap is None
                                         else round(1000.0 * gap, 3)),
+                "decode_pending": len(self._decode_heap),
+                "decode_submitted": self.n_decode_submitted,
+                "decode_taken": self.n_decode_taken,
                 "lanes": {ln.name: {"weight": ln.weight,
                                     "queued": len(ln.heap),
                                     "submitted": ln.n_submitted,

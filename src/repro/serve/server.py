@@ -26,8 +26,18 @@ server re-creates the batch axis continuously —
   occupy a ladder slot, and serves priority lanes by weighted fair
   queueing.  The server feeds measured batch service times back to the
   scheduler (and the engine) after every executed batch.
-* Policy lives in one frozen :class:`~repro.serve.config.ServeConfig`
-  (the legacy loose kwargs survive as a ``DeprecationWarning`` shim).
+* **RAG serving**: a pipeline ending in a ``generate`` stage splits at the
+  answer boundary — the retrieval prefix rides the micro-batch/bucket
+  machinery above, then the request's assembled prompt enters a per-tenant
+  continuous-batching decode pool (:class:`~repro.serve.batching
+  .ContinuousBatcher` slots over one block-allocated KV cache).  The
+  scheduler's decode queue admits new prompts *between* decode steps
+  (iteration-level scheduling), so one long answer never blocks admission,
+  and :meth:`step` interleaves one retrieval batch with one decode step —
+  batches mix retrieval-resume and mid-decode requests.  Prefill and
+  decode-step programs are keyed into the engine's jit cache, so
+  ``recompiles_since_warmup`` covers the decode path too.
+* Policy lives in one frozen :class:`~repro.serve.config.ServeConfig`.
 
 The server owns no thread until :meth:`start`; tests and replay drive it
 synchronously with :meth:`pump`.
@@ -37,7 +47,6 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-import warnings
 from typing import Any
 
 import jax
@@ -47,8 +56,10 @@ from repro.core import ir
 from repro.core.compiler import Context, _execute
 from repro.core.passes import compile_pipeline
 from repro.core.plan import chain_prefix_digests
+from repro.serve.batching import ContinuousBatcher
+from repro.serve.batching import Request as _DecodeRequest
 from repro.serve.cache import StageResultCache, query_digest
-from repro.serve.config import ServeConfig, config_from_legacy_kwargs
+from repro.serve.config import ServeConfig
 from repro.serve.request import RequestTrace, ServeRequest
 from repro.serve.scheduler import MicroBatchScheduler
 from repro.serve.trace import TraceLog
@@ -65,29 +76,18 @@ _UNSET = object()
 
 @dataclasses.dataclass
 class _Tenant:
-    """One served pipeline: its compiled chain plus cache-key material."""
+    """One served pipeline: its compiled chain plus cache-key material.
+    ``generate`` is the chain's trailing :class:`~repro.core.stages
+    .Generate` stage instance when the pipeline ends in one (the tenant
+    then serves retrieval through the micro-batcher and decode through
+    its pool), else None."""
     name: str
     op: Any                       # compiled IR root
     chain: list                   # ir.chain(op)
     stateful: bool                # any stage with a version marker?
     prefixes: list                # chained stage digests (shared scope)
     compile_report: dict
-
-
-class _CompatRequestList(list):
-    """``submit`` used to return a bare :class:`ServeRequest` for nq==1 and
-    a list otherwise; it now always returns a list.  For one release the
-    nq==1 result is this shim — a real list that also forwards request
-    attributes (``.wait``, ``.done``, ``.trace``, ...) to its single
-    element with a :class:`DeprecationWarning` so legacy callers keep
-    working while they migrate to ``submit_one``."""
-
-    def __getattr__(self, name):
-        warnings.warn(
-            "PipelineServer.submit() now always returns a list of "
-            "ServeRequest; use submit_one() for the single-request API",
-            DeprecationWarning, stacklevel=2)
-        return getattr(self[0], name)
+    generate: Any = None          # trailing Generate stage ref, if any
 
 
 class PipelineServer:
@@ -104,8 +104,8 @@ class PipelineServer:
 
     def __init__(self, pipeline, backend, config: ServeConfig | None = None,
                  *, cache: StageResultCache | None = None,
-                 name: str = "default", **legacy):
-        self.config = config_from_legacy_kwargs(config, legacy)
+                 name: str = "default"):
+        self.config = config if config is not None else ServeConfig()
         self.backend = backend
         self.engine = backend.engine
         self._digest_scope = f"serve:be{backend.uid}:"
@@ -129,6 +129,10 @@ class PipelineServer:
         self._rid = 0
         self._rid_lock = threading.Lock()
         self._warm_compiles: int | None = None
+        #: tenant name -> decode pool (generate-stage tenants only)
+        self._pools: dict[str, ContinuousBatcher] = {}
+        #: rid -> in-flight ServeRequest currently decoding in some pool
+        self._decoding: dict[int, ServeRequest] = {}
         self._thread: threading.Thread | None = None
         self._stop = False
         self.last_error: BaseException | None = None
@@ -155,14 +159,36 @@ class PipelineServer:
             optimize=self.config.optimize if optimize is None else optimize,
             report=report)
         chain = ir.chain(op)
+        gen = self._generate_ref(chain[-1]) if chain[-1].kind == "generate" \
+            else None
         self._tenants[name] = _Tenant(
             name=name, op=op, chain=chain,
             stateful=op.stateful_subtree(),
             prefixes=chain_prefix_digests(chain, scope=self._digest_scope),
-            compile_report=report)
+            compile_report=report, generate=gen)
+        if gen is not None:
+            # per-tenant decode pool over one block-allocated KV cache;
+            # prefill/decode-step programs key into the engine's jit cache
+            # so warmup covers them and steady state never recompiles
+            cfg_lm, params_lm = self.backend.lm(gen.params["model"])
+            self._pools[name] = ContinuousBatcher(
+                cfg_lm, params_lm, slots=self.config.decode_slots,
+                max_len=(gen.params["max_prompt_len"]
+                         + gen.params["max_new_tokens"] + 1),
+                engine=self.engine,
+                key=(self.backend.uid, chain[-1].key()))
         self.log.register_tenant(name)
         self._warm_compiles = None      # new chain: warm-up snapshot stale
         return name
+
+    @staticmethod
+    def _generate_ref(op):
+        """The Generate stage instance behind a compiled ``generate`` op
+        (rebuilt from the op's params if a rewrite dropped the ref)."""
+        if op.ref is not None:
+            return op.ref
+        from repro.core.stages import Generate
+        return Generate(**op.params)
 
     def pipelines(self) -> list[str]:
         return list(self._tenants)
@@ -255,13 +281,11 @@ class PipelineServer:
     def submit(self, Q, *, timeout_ms=_UNSET, lane: str | None = None,
                pipeline: str | None = None) -> list:
         """Enqueue the queries in ``Q`` (an nq>=1 Q relation).  Always
-        returns a list of :class:`ServeRequest` — one per row.  (For one
-        release the nq==1 result still forwards request attributes with a
-        ``DeprecationWarning``; new code uses :meth:`submit_one`.)  See
+        returns a plain list of :class:`ServeRequest` — one per row
+        (:meth:`submit_one` is the single-request API).  See
         :meth:`submit_one` for ``timeout_ms`` / ``lane`` / ``pipeline``
         semantics and the overload exceptions."""
-        reqs = self._make_requests(Q, timeout_ms, lane, pipeline)
-        return _CompatRequestList(reqs) if len(reqs) == 1 else reqs
+        return self._make_requests(Q, timeout_ms, lane, pipeline)
 
     def submit_wait(self, Q, *, timeout: float = 60.0, timeout_ms=_UNSET,
                     lane: str | None = None, pipeline: str | None = None):
@@ -276,25 +300,38 @@ class PipelineServer:
         return outs[0] if len(outs) == 1 else outs
 
     # -- serving loop -------------------------------------------------------
+    def _decode_busy(self) -> bool:
+        return bool(self._decoding) or self.scheduler.decode_pending() > 0
+
     def step(self, *, block: bool = False, timeout: float | None = None,
              drain: bool = False) -> int:
-        """Close and execute at most one micro-batch; returns the number of
-        requests it retired (served + shed; 0 = no batch closed)."""
+        """Close and execute at most one micro-batch, then advance every
+        decode pool by one iteration (admit freed slots, one ragged decode
+        step); returns the number of requests retired (served + shed;
+        0 = no batch closed and no decode finished).  Never blocks while
+        decodes are in flight — a blocked wait for retrieval arrivals must
+        not stall token production."""
+        if block and self._decode_busy():
+            block = False
         batch = self.scheduler.next_batch(block=block, timeout=timeout,
                                           drain=drain)
-        if batch is None:
-            return 0
-        self._execute_batch(batch)
-        return len(batch.requests) + len(batch.shed)
+        n = 0
+        if batch is not None:
+            self._execute_batch(batch)
+            n += len(batch.requests) + len(batch.shed)
+        n += self._decode_pump()
+        return n
 
     def pump(self) -> int:
-        """Drain the queue synchronously (replay/test mode)."""
+        """Drain the queue synchronously (replay/test mode): retrieval
+        batches and decode iterations until nothing is queued, waiting for
+        a slot, or mid-decode."""
         total = 0
         while True:
             n = self.step(drain=True)
-            if n == 0:
-                return total
             total += n
+            if n == 0 and not self._decode_busy():
+                return total
 
     def start(self) -> "PipelineServer":
         """Spawn the serving thread (continuous mode)."""
@@ -330,15 +367,31 @@ class PipelineServer:
         row = StageResultCache.row(Q_sample, 0)
         t0 = time.monotonic()
         for tenant in self._tenants.values():
+            pool = self._pools.get(tenant.name)
+            # a generate tenant serves its chain split at the answer
+            # boundary, so warm exactly what serving runs: the retrieval
+            # prefix + prompt assembly at every rung, then the pool's
+            # prefill and decode-step programs once — their shapes are
+            # fixed (static prompt length, full-pool decode arrays), so
+            # one compile each covers every future mix of slots
+            chain = (tenant.chain if pool is None else tenant.chain[:-1])
             for bucket in self.scheduler.ladder:
                 Qb = jax.tree.map(
                     lambda x: np.tile(x, (bucket,) + (1,) * (x.ndim - 1)),
                     row)
                 ctx = Context(self.backend)
                 Q, R, tok = Qb, None, None
-                for stage in tenant.chain:
+                for stage in chain:
                     Q, R, tok = _execute(stage, ctx, Q, R, tok)
+                if pool is not None:
+                    jax.block_until_ready(tenant.generate.assemble(ctx, Q, R))
                 jax.block_until_ready((Q, R))
+            if pool is not None:
+                P = tenant.generate.params["max_prompt_len"]
+                pool.prefill_request(_DecodeRequest(
+                    rid=-1, prompt=np.zeros(P, np.int32), max_new_tokens=2))
+                pool.step_active()
+                pool.reset()
         if self.engine is not None:
             self._warm_compiles = self.engine.total_compiles()
         out = {"warmup_s": round(time.monotonic() - t0, 3),
@@ -451,7 +504,11 @@ class PipelineServer:
         ctx = Context(self.backend)
         tok = ctx.source_token(Q, R)
         stage_times = []
-        for i in range(depth, L):
+        # a generate tenant runs only its retrieval prefix here; the final
+        # stage is decode, which the request rides iteration-level in the
+        # tenant's pool (handoff below) instead of run-to-completion
+        L_here = L - 1 if tenant.generate is not None else L
+        for i in range(depth, L_here):
             stage = chain[i]
             t0 = time.monotonic() if self.trace_stages else 0.0
             Q, R, tok = _execute(stage, ctx, Q, R, tok)
@@ -473,6 +530,24 @@ class PipelineServer:
                                      None if Rh is None
                                      else StageResultCache.row(Rh, j),
                                      writer=tenant.name)
+        if tenant.generate is not None:
+            # answer boundary: assemble each live row's prompt (batched at
+            # the same bucket shape warm-up compiled) and queue it for a
+            # decode slot — these requests retire from _decode_pump, and
+            # the batch they just rode mixed with pure-retrieval tenants
+            gen = tenant.generate
+            prompts = gen.assemble(ctx, Q, R)
+            jax.block_until_ready(prompts)
+            prompts = np.asarray(prompts)
+            Qh = StageResultCache.to_host(Q)
+            Rh = StageResultCache.to_host(R)
+            for j, req in enumerate(reqs):
+                req.trace.stage_ms = tuple(stage_times)
+                req._prompt = prompts[j]
+                req._Q_row = StageResultCache.row(Qh, j)
+                req._R_row = StageResultCache.row(Rh, j)
+                self.scheduler.decode_submit(req)
+            return bucket
         jax.block_until_ready((Q, R))
         Qh = StageResultCache.to_host(Q)
         Rh = None if R is None else StageResultCache.to_host(R)
@@ -487,6 +562,54 @@ class PipelineServer:
                     writer=tenant.name)
             self._finish(req, StageResultCache.row(result, j))
         return bucket
+
+    def _decode_pump(self) -> int:
+        """One iteration of every decode pool: admit queued prompts into
+        freed KV-cache slots (EDF order — this between-steps admission is
+        what makes decode scheduling iteration-level), one ragged decode
+        step per active pool, then retire finished answers.  Returns the
+        number of requests retired."""
+        retired = 0
+        free = sum(p.free_slots() for p in self._pools.values())
+        if free and self.scheduler.decode_pending():
+            now = time.monotonic()
+            for req in self.scheduler.decode_take(free):
+                if req.expired(now):
+                    self._finish(req, None, timed_out=True)
+                    retired += 1
+                    continue
+                pool = self._pools[req.tenant]
+                if pool.free_slots() == 0:
+                    # the freed slot was another tenant's pool: wait on
+                    self.scheduler.decode_submit(req)
+                    continue
+                tenant = self._tenants[req.tenant]
+                pool.prefill_request(_DecodeRequest(
+                    rid=req.rid, prompt=req._prompt,
+                    max_new_tokens=tenant.generate.params["max_new_tokens"]))
+                # the prefill produced the first answer token
+                req.trace.ttft_ms = 1000.0 * (time.monotonic()
+                                              - req.trace.t_arrival)
+                self._decoding[req.rid] = req
+        for pool in self._pools.values():
+            if pool.active_slots() == 0:
+                continue
+            for dreq in pool.step_active():
+                req = self._decoding.pop(dreq.rid)
+                tenant = self._tenants[req.tenant]
+                tokens = np.asarray(dreq.generated, np.int32)[None, :]
+                row = dict(req._R_row)
+                row["tokens"] = tokens
+                req.trace.n_tokens = int(tokens.shape[1])
+                if self.cache.enabled:
+                    self.cache.store(
+                        self._prefix_digests(tenant)[-1], req.qdigest,
+                        req._Q_row, row, writer=tenant.name)
+                # row(…, 0) copies: the served result must never alias the
+                # live cache entry (same invariant as the retrieval path)
+                self._finish(req, StageResultCache.row(row, 0))
+                retired += 1
+        return retired
 
     def _finish(self, req, result, *, timed_out: bool = False) -> None:
         t = time.monotonic()
@@ -516,6 +639,14 @@ class PipelineServer:
             "stage_cache": self.cache.info(),
         }
         out["cross_pipeline_hits"] = self.cache.cross_pipeline_hits
+        if self._pools:
+            out["decode_pools"] = {
+                name: {"slots": p.slots,
+                       "active": p.active_slots(),
+                       "queued": self.scheduler.decode_pending(),
+                       "decode_steps": p.n_decode_steps,
+                       "max_len": p.max_len}
+                for name, p in self._pools.items()}
         if self.engine is not None:
             out["engine"] = self.engine.stats()
             total = self.engine.total_compiles()
@@ -551,13 +682,13 @@ class MultiPipelineServer(PipelineServer):
 
     def __init__(self, pipelines: dict, backend,
                  config: ServeConfig | None = None, *,
-                 cache: StageResultCache | None = None, **legacy):
+                 cache: StageResultCache | None = None):
         if not pipelines:
             raise ValueError("MultiPipelineServer needs at least one "
                              "pipeline")
         items = list(pipelines.items())
         first_name, first = items[0]
         super().__init__(first, backend, config, cache=cache,
-                         name=first_name, **legacy)
+                         name=first_name)
         for tname, pipe in items[1:]:
             self.add_pipeline(pipe, name=tname)

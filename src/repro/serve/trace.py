@@ -65,6 +65,9 @@ class TraceLog:
         self.tenants: dict[str, dict] = {}
         #: WFQ lane -> completed-request count
         self.lane_served: dict[str, int] = {}
+        #: decode-side running counters (generate-stage requests)
+        self.n_decoded = 0          # completed requests that decoded tokens
+        self.n_tokens_total = 0     # tokens decoded across all of them
 
     # -- recording ----------------------------------------------------------
     def record_batch(self, size: int) -> None:
@@ -123,6 +126,9 @@ class TraceLog:
             hd[d] = hd.get(d, 0) + 1
             if trace.cross_prefix_hit:
                 ten["cross_pipeline_prefix_hits"] += 1
+            if trace.n_tokens:
+                self.n_decoded += 1
+                self.n_tokens_total += trace.n_tokens
 
     # -- reporting ----------------------------------------------------------
     def summary(self) -> dict:
@@ -154,4 +160,16 @@ class TraceLog:
         out["latency_ms"] = latency_summary([t.latency_ms for t in done])
         out["queue_wait_ms"] = latency_summary(
             [t.queue_wait_ms for t in done])
+        decoded = [t for t in done if t.n_tokens]
+        if decoded or self.n_decoded:
+            # per-token latency excludes the first token (TTFT owns the
+            # prompt prefill + retrieval); a 1-token decode has no steps
+            out["decode"] = {
+                "requests": self.n_decoded,
+                "tokens": self.n_tokens_total,
+                "ttft_ms": latency_summary([t.ttft_ms for t in decoded]),
+                "per_token_ms": latency_summary(
+                    [(t.latency_ms - t.ttft_ms) / max(t.n_tokens - 1, 1)
+                     for t in decoded]),
+            }
         return out

@@ -15,9 +15,14 @@ except ModuleNotFoundError:      # property tests skip; fallbacks below run
     HAVE_HYPOTHESIS = False
 
 from repro.core import (Extract, FatRetrieve, MultiRetrieve, PrunedRetrieve,
-                        Retrieve, optimize_pipeline)
-from repro.core.rewrite import optimize_pipeline
+                        Retrieve, compile_pipeline, raise_ir)
 from repro.core.transformer import Cutoff, Linear, Then
+
+
+def optimize(pipe, backend):
+    """Compile through the single optimization entry point; raise back to
+    a Transformer tree for the structural assertions below."""
+    return raise_ir(compile_pipeline(pipe, backend))
 
 
 def run(p, env, optimize=False):
@@ -115,7 +120,7 @@ def test_feature_union_columns(small_ir):
 # ---------------------------------------------------------------------------
 
 def test_cutoff_pushdown_structure(small_ir):
-    opt = optimize_pipeline(Retrieve("BM25") % 10, small_ir["backend"])
+    opt = optimize(Retrieve("BM25") % 10, small_ir["backend"])
     assert isinstance(opt, PrunedRetrieve)
     assert opt.params["k"] == 10
 
@@ -130,7 +135,7 @@ def test_cutoff_pushdown_preserves_topk(small_ir):
 
 def test_fat_fusion_exact(small_ir):
     pipe = Retrieve("BM25", k=20) >> (Extract("QL") ** Extract("TF_IDF"))
-    opt = optimize_pipeline(pipe, small_ir["backend"])
+    opt = optimize(pipe, small_ir["backend"])
     assert isinstance(opt, FatRetrieve)
     Ra, Rb = run(pipe, small_ir, optimize=False), run(opt, small_ir, optimize=False)
     assert (np.asarray(Ra["docids"]) == np.asarray(Rb["docids"])).all()
@@ -140,7 +145,7 @@ def test_fat_fusion_exact(small_ir):
 
 def test_linear_fusion_exact(small_ir):
     pipe = 0.6 * Retrieve("BM25", k=20) + 0.4 * Retrieve("DPH", k=20)
-    opt = optimize_pipeline(pipe, small_ir["backend"])
+    opt = optimize(pipe, small_ir["backend"])
     assert isinstance(opt, MultiRetrieve)
     Ra = run(pipe, small_ir, optimize=False)
     Rb = run(opt, small_ir, optimize=False)
@@ -155,7 +160,7 @@ def _check_rewrite_laws(env, k1, k2, alpha):
     be = env["backend"]
     # cutoff merge law
     p = (Retrieve("BM25", k=30) % k1) % k2
-    opt = optimize_pipeline(p, be)
+    opt = optimize(p, be)
     ks = min(k1, k2)
     R = run(opt, env, optimize=False)
     assert R["docids"].shape[1] == ks

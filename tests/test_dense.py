@@ -4,10 +4,10 @@ key preservation for the dense ops, and engine==sequential equality."""
 import numpy as np
 import pytest
 
-from repro.core import (DenseRerank, DenseRetrieve, FusedDenseRerank,
-                        FusedDenseRetrieve, JaxBackend, Retrieve,
-                        ShardedQueryEngine, compile_pipeline, lower,
-                        raise_ir)
+from repro.core import (BackendDescriptor, DenseRerank, DenseRetrieve,
+                        FusedDenseRerank, FusedDenseRetrieve, JaxBackend,
+                        Retrieve, ShardedQueryEngine, compile_pipeline,
+                        lower, raise_ir)
 from repro.core.transformer import Cutoff
 from repro.index.dense import (build_ivf_index, build_ivfpq_index,
                                build_pq_codebook, dense_retrieve_exact,
@@ -22,7 +22,8 @@ def _dense_backend(env, default_k=60, extra=(), **kw):
     sparse first stage exact, so dense equivalences are exact too)."""
     caps = frozenset({"fat", "fused_dense", "dense_topk"}) | set(extra)
     return JaxBackend(env["index"], default_k=default_k,
-                      dense=env["backend"].dense, capabilities=caps, **kw)
+                      dense=env["backend"].dense,
+                      descriptor=BackendDescriptor.default(caps), **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -54,7 +55,7 @@ def test_dense_rerank_fusion_needs_capability(small_ir):
     with itself under optimisation)."""
     be = JaxBackend(small_ir["index"], default_k=60,
                     dense=small_ir["backend"].dense,
-                    capabilities=frozenset({"fat"}))
+                    descriptor=BackendDescriptor.default(frozenset({"fat"})))
     pipe = (Retrieve("BM25", k=200) >> DenseRerank(alpha=0.3)) % 10
     op = compile_pipeline(pipe, be)
     assert "fused_dense_rerank" not in _kinds(op)

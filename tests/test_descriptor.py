@@ -8,7 +8,6 @@ counters), plus profile corruption recovery and backend-digest
 invalidation."""
 import dataclasses
 import json
-import warnings
 
 import numpy as np
 import pytest
@@ -68,17 +67,17 @@ def test_peak_digest_tracks_calibration():
     assert d.peak_digest != d2.peak_digest
 
 
-def test_capabilities_shim_deprecation(env):
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        be = JaxBackend(env["index"], capabilities=frozenset({"fat"}))
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert be.capabilities == frozenset({"fat"})
+def test_capabilities_kwarg_removed(env):
+    """The pre-descriptor ``capabilities=`` ctor kwarg finished its
+    deprecation cycle: it now fails like any unknown kwarg, and the
+    descriptor is the only capability surface."""
+    with pytest.raises(TypeError):
+        JaxBackend(env["index"], capabilities=frozenset({"fat"}))
+    be = JaxBackend(env["index"],
+                    descriptor=BackendDescriptor.default(frozenset({"fat"})))
+    assert be.capabilities == frozenset({"fat"})     # read-only alias stays
     assert be.descriptor.capabilities == frozenset({"fat"})
     assert as_descriptor(be) is be.descriptor
-    with pytest.raises(TypeError):
-        JaxBackend(env["index"], capabilities=frozenset({"fat"}),
-                   descriptor=BackendDescriptor.default())
 
 
 # ---------------------------------------------------------------------------

@@ -10,9 +10,10 @@ try:
 except ModuleNotFoundError:      # property tests skip; fallbacks below run
     HAVE_HYPOTHESIS = False
 
-from repro.core import (DenseRerank, Experiment, Extract, ExperimentPlan,
-                        FusedTopKRetrieve, JaxBackend, Retrieve, RM3Expand,
-                        SDMRewrite, ShardedQueryEngine, default_bucket_ladder)
+from repro.core import (BackendDescriptor, DenseRerank, Experiment, Extract,
+                        ExperimentPlan, FusedTopKRetrieve, JaxBackend,
+                        Retrieve, RM3Expand, SDMRewrite, ShardedQueryEngine,
+                        default_bucket_ladder)
 from repro.core.compiler import Context
 from repro.core.data import make_queries
 from repro.core.engine import StageProgram
@@ -87,7 +88,8 @@ def test_optimized_pipelines_match_under_sharded_execution(small_ir):
     pipelines only — pruning rewrites are approximate by design)."""
     env = small_ir
     be = JaxBackend(env["index"], default_k=60, dense=env["backend"].dense,
-                    capabilities=frozenset({"fat", "multi_model"}))
+                    descriptor=BackendDescriptor.default(
+                        frozenset({"fat", "multi_model"})))
     for pipe in [(Retrieve("BM25", k=30) >> SDMRewrite()) % 10,
                  Retrieve("BM25", k=20) >> Extract("QL") >> Extract("TF_IDF"),
                  (Retrieve("BM25", k=30) >> RM3Expand(fb_docs=5)) % 10]:
@@ -213,9 +215,11 @@ def _fused_caps_backends(env):
     permitting) instead of the RQ1 pushdown on both sides."""
     caps = frozenset({"fat", "multi_model", "fused_topk", "fused_scoring"})
     be = JaxBackend(env["index"], default_k=60, query_chunk=4,
-                    dense=env["backend"].dense, capabilities=caps)
+                    dense=env["backend"].dense,
+                    descriptor=BackendDescriptor.default(caps))
     be_seq = JaxBackend(env["index"], default_k=60, query_chunk=4,
-                        dense=env["backend"].dense, capabilities=caps,
+                        dense=env["backend"].dense,
+                        descriptor=BackendDescriptor.default(caps),
                         sharded=False)
     return be, be_seq
 
@@ -282,8 +286,8 @@ def test_k_exceeds_ndocs_through_fused_topk_path(small_ir):
     # the optimised cutoff chain survives compilation + gating at k > n_docs
     be_nopruning = JaxBackend(index, default_k=50, query_chunk=4,
                               dense=be.dense,
-                              capabilities=frozenset(
-                                  {"fat", "multi_model", "fused_topk"}))
+                              descriptor=BackendDescriptor.default(frozenset(
+                                  {"fat", "multi_model", "fused_topk"})))
     Ro = (Retrieve("BM25", k=k) % k).transform(Q, backend=be_nopruning,
                                                optimize=True)
     np.testing.assert_array_equal(np.asarray(Ro["docids"]),

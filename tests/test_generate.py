@@ -1,0 +1,147 @@
+"""The ``generate`` leaf: A-schema typing, IR round-trips, rewrite
+soundness under optimisation, and token-for-token serving parity between
+the continuous-batched decode path and the sequential offline oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (Generate, Retrieve, DenseRerank, SchemaError,
+                        SDMRewrite, compile_pipeline, lower, raise_ir)
+from repro.core.compiler import run_pipeline
+from repro.core.data import make_queries
+from repro.models import transformer_lm as tlm
+from repro.serve.config import ServeConfig
+from repro.serve.server import PipelineServer
+
+
+def _tiny_cfg():
+    return tlm.LMConfig(name="tiny", n_layers=2, d_model=32, n_q=4, n_kv=2,
+                        d_head=8, d_ff=64, vocab=128, remat=False)
+
+
+@pytest.fixture(scope="module")
+def gen_env(small_ir):
+    """small_ir backend with a tiny decoder LM registered."""
+    be = small_ir["backend"]
+    if "tiny" not in be._lms:
+        be.register_lm("tiny", _tiny_cfg())
+    return small_ir
+
+
+def _rag(k=8, T=6, P=32, docs=3):
+    return (Retrieve("BM25") >> DenseRerank() % k
+            >> Generate("tiny", max_new_tokens=T, max_prompt_len=P,
+                        prompt_docs=docs))
+
+
+# ---------------------------------------------------------------------------
+# A-schema typing
+# ---------------------------------------------------------------------------
+
+def test_generate_over_pure_query_expression_is_schema_error(gen_env):
+    with pytest.raises(SchemaError, match="pure Q -> Q"):
+        compile_pipeline(SDMRewrite() >> Generate("tiny"),
+                         gen_env["backend"])
+
+
+def test_generate_is_terminal_no_stage_may_consume_a(gen_env):
+    be = gen_env["backend"]
+    base = Retrieve("BM25", k=20) >> Generate("tiny")
+    with pytest.raises(SchemaError, match="terminal"):
+        compile_pipeline(base % 5, be)                  # cutoff over A
+    with pytest.raises(SchemaError, match="terminal"):
+        compile_pipeline(2.0 * base, be)                # scale over A
+    with pytest.raises(SchemaError, match="terminal"):
+        compile_pipeline(base >> DenseRerank(), be)     # rerank over A
+    with pytest.raises(SchemaError):
+        compile_pipeline(base | Retrieve("QL", k=20), be)
+
+
+def test_generate_schema_carries_static_decode_width(gen_env):
+    from repro.core.passes import annotate
+    op = lower(_rag(k=8, T=6))
+    s = annotate(op, gen_env["backend"])[id(op)]
+    assert s.out == "A"
+    assert s.k == 8          # result depth the prompt reads
+    assert s.width == 6      # static decode length (bucket-ladder safe)
+    assert s.reads_results
+
+
+# ---------------------------------------------------------------------------
+# IR round-trip + optimisation soundness
+# ---------------------------------------------------------------------------
+
+def test_generate_ir_round_trip_preserves_key():
+    pipe = _rag()
+    assert raise_ir(lower(pipe)).key() == pipe.key()
+
+
+def test_opt_on_equals_opt_off_with_generate(gen_env):
+    env = gen_env
+    Q = {k: np.asarray(v)[:4] for k, v in env["Q"].items()}
+    A_off = run_pipeline(_rag(), Q, backend=env["backend"], optimize=False)
+    A_on = run_pipeline(_rag(), Q, backend=env["backend"], optimize=True)
+    np.testing.assert_array_equal(np.asarray(A_off["tokens"]),
+                                  np.asarray(A_on["tokens"]))
+    np.testing.assert_array_equal(np.asarray(A_off["docids"]),
+                                  np.asarray(A_on["docids"]))
+
+
+def test_fusion_still_fires_beneath_generate(gen_env):
+    op = compile_pipeline(_rag(), gen_env["backend"])
+    from repro.core import ir
+    kinds = [o.kind for o in ir.chain(op)]
+    assert kinds[-1] == "generate"
+    assert "fused_dense_rerank" in kinds     # rewrite ran under the A leaf
+
+
+# ---------------------------------------------------------------------------
+# served decode == sequential offline oracle, token for token
+# ---------------------------------------------------------------------------
+
+def test_served_rag_matches_offline_oracle_token_for_token(gen_env):
+    env = gen_env
+    server = PipelineServer(_rag(), env["backend"],
+                            ServeConfig.default().with_decode(4))
+    server.warmup({k: np.asarray(v)[:1] for k, v in env["Q"].items()})
+    rows = [{k: np.asarray(v)[j:j + 1] for k, v in env["Q"].items()}
+            for j in range(4)]
+    reqs = [server.submit_one(r) for r in rows]
+    server.pump()
+    for row, req in zip(rows, reqs):
+        served = req.wait(10.0)
+        oracle = run_pipeline(_rag(), row, backend=env["backend"])
+        np.testing.assert_array_equal(np.asarray(served["tokens"]),
+                                      np.asarray(oracle["tokens"]))
+        np.testing.assert_array_equal(np.asarray(served["docids"]),
+                                      np.asarray(oracle["docids"]))
+        assert req.trace.n_tokens == 6
+        assert req.trace.ttft_ms > 0.0
+
+
+def test_mixed_serving_no_recompiles_after_warmup(gen_env):
+    """100+ requests mixing a retrieval-only tenant and a RAG tenant must
+    ride warm compiled variants end to end: recompiles_since_warmup == 0,
+    decode included (prefill/decode-step are pinned-shape engine
+    programs)."""
+    env = gen_env
+    server = PipelineServer(_rag(), env["backend"],
+                            ServeConfig.default().with_decode(4))
+    server.add_pipeline(Retrieve("BM25") % 10, name="ret-only")
+    server.warmup({k: np.asarray(v)[:1] for k, v in env["Q"].items()})
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(110):
+        t = rng.integers(0, 12000, (1, 3))
+        Qi = make_queries(t, qids=np.array([1000 + i]))
+        pipeline = None if i % 3 else "ret-only"
+        reqs.append(server.submit_one(Qi, pipeline=pipeline))
+        if i % 7 == 0:
+            server.pump()        # interleave: some batches mix mid-decode
+    server.pump()
+    for req in reqs:
+        assert req.wait(10.0) is not None
+    st = server.stats()
+    assert st["recompiles_since_warmup"] == 0
+    assert st["served"] >= 110
+    assert st["decode"]["requests"] > 0
+    assert st["decode_pools"]["default"]["decode_steps"] > 0

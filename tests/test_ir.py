@@ -12,36 +12,47 @@ try:
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import (Extract, FatRetrieve, FusedFatRetrieve,
-                        FusedTopKRetrieve, JaxBackend, LTRRerank, Retrieve,
-                        RM3Expand, SchemaError, SDMRewrite, StemRewrite,
-                        compile_pipeline, lower, optimize_pipeline, raise_ir)
+from repro.core import (BackendDescriptor, Extract, FatRetrieve,
+                        FusedFatRetrieve, FusedTopKRetrieve, JaxBackend,
+                        LTRRerank, Retrieve, RM3Expand, SchemaError,
+                        SDMRewrite, StemRewrite, compile_pipeline, lower,
+                        raise_ir)
 from repro.core.compiler import Context
 from repro.core.plan import ExperimentPlan
-from repro.core.rewrite import _clone
 from repro.core.transformer import Cutoff, Generic, Then
+
+
+def optimize_pipeline(pipe, backend):
+    return raise_ir(compile_pipeline(pipe, backend))
 
 
 def _fused_backend(env, default_k=60):
     """No dynamic pruning (keeps semantics exact), kernel lowerings on."""
     return JaxBackend(env["index"], default_k=default_k,
                       dense=env["backend"].dense,
-                      capabilities=frozenset({"fat", "fused_topk",
-                                              "fused_scoring"}))
+                      descriptor=BackendDescriptor.default(
+                          frozenset({"fat", "fused_topk",
+                                     "fused_scoring"})))
 
 
 # ---------------------------------------------------------------------------
-# _clone regression: clones must own their params dict
+# raise_ir must hand back nodes owning their params dicts
 # ---------------------------------------------------------------------------
 
-def test_clone_gives_own_params_dict():
-    orig = Retrieve("BM25", k=10)
-    child = Retrieve("QL", k=5)
-    clone = _clone(orig, [child])
-    clone.params["k"] = 999
-    assert orig.params["k"] == 10          # the old _clone shared the dict
-    assert clone.children == (child,)
-    assert orig.children == ()
+def test_raised_rebuilt_nodes_own_their_params_dicts():
+    """When ``raise_ir`` must rebuild a combinator (its params diverged
+    from the ref's), the rebuilt node owns a fresh params dict: mutating
+    it must never corrupt the source pipeline or the IR op — the invariant
+    the old rewriter's ``_clone`` guarded.  (``raise_ir(lower(t))`` with
+    untouched params returns ``t`` itself by design.)"""
+    pipe = Retrieve("BM25", k=10) % 5
+    op = lower(pipe).with_params(k=3)       # diverged: forces a rebuild
+    raised = raise_ir(op)
+    assert raised is not pipe and raised.params["k"] == 3
+    raised.params["k"] = 999
+    assert pipe.params["k"] == 5
+    assert op.params["k"] == 3
+    assert raise_ir(lower(pipe)) is pipe    # identity fast path intact
 
 
 # ---------------------------------------------------------------------------

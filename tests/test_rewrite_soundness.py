@@ -10,15 +10,20 @@ try:
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import (JaxBackend, Retrieve, RM3Expand, SDMRewrite,
-                        StemRewrite, optimize_pipeline)
+from repro.core import (BackendDescriptor, JaxBackend, Retrieve, RM3Expand,
+                        SDMRewrite, StemRewrite, compile_pipeline, raise_ir)
 from repro.core.stages import PrunedRetrieve
 from repro.core.transformer import Cutoff, Then
 
 
+def optimize(pipe, backend, trace=None):
+    return raise_ir(compile_pipeline(pipe, backend, trace=trace))
+
+
 def _no_prune_backend(env):
     return JaxBackend(env["index"], default_k=60, dense=env["backend"].dense,
-                      capabilities=frozenset({"fat", "multi_model"}))
+                      descriptor=BackendDescriptor.default(
+                          frozenset({"fat", "multi_model"})))
 
 
 def _kinds(node):
@@ -35,7 +40,7 @@ def test_cutoff_lands_on_r_producer_not_query_rewrite(small_ir):
     """(Retrieve >> SDM) % K: the cutoff hops over the trailing Q -> Q
     stage onto Retrieve, where the RQ1 pushdown can fire."""
     be = small_ir["backend"]
-    opt = optimize_pipeline((Retrieve("BM25", k=30) >> SDMRewrite()) % 10, be)
+    opt = optimize((Retrieve("BM25", k=30) >> SDMRewrite()) % 10, be)
     assert isinstance(opt, Then)
     assert isinstance(opt.children[0], PrunedRetrieve)
     assert opt.children[0].params["k"] == 10
@@ -51,7 +56,7 @@ def test_cutoff_lands_on_r_producer_not_query_rewrite(small_ir):
 def test_cutoff_hops_multiple_trailing_rewrites(small_ir):
     be = _no_prune_backend(small_ir)
     pipe = (Retrieve("BM25", k=30) >> SDMRewrite() >> StemRewrite()) % 10
-    opt = optimize_pipeline(pipe, be)
+    opt = optimize(pipe, be)
     assert isinstance(opt, Then)
     assert isinstance(opt.children[0], Cutoff)        # no pruning capability
     assert isinstance(opt.children[0].children[0], Retrieve)
@@ -64,7 +69,7 @@ def test_cutoff_blocked_by_r_reading_rewrite(small_ir):
     be = small_ir["backend"]
     pipe = (Retrieve("BM25", k=30) >> RM3Expand(fb_docs=5)) % 10
     trace = []
-    opt = optimize_pipeline(pipe, be, trace=trace)
+    opt = optimize(pipe, be, trace=trace)
     assert isinstance(opt, Cutoff)
     assert not any(name == "cutoff_into_then" for name, *_ in trace)
 
@@ -75,7 +80,7 @@ def test_cutoff_still_pushes_past_rm3_onto_final_retrieve(small_ir):
     be = small_ir["backend"]
     pipe = (Retrieve("BM25", k=30) >> RM3Expand(fb_docs=5)
             >> Retrieve("BM25", k=30)) % 10
-    opt = optimize_pipeline(pipe, be)
+    opt = optimize(pipe, be)
     assert isinstance(opt, Then)
     assert isinstance(opt.children[-1], PrunedRetrieve)
     assert type(opt.children[1]).__name__ == "RM3Expand"

@@ -403,43 +403,38 @@ def test_serve_config_builders_and_validation():
     assert d["lanes"] == [["interactive", 4.0], ["background", 1.0]]
 
 
-def test_legacy_kwargs_shim_warns_and_maps(small_ir):
+def test_legacy_kwargs_removed(small_ir):
+    """The loose-kwarg ctor shim finished its deprecation cycle: every
+    policy knob now arrives through ``config=ServeConfig(...)`` and the
+    old kwargs fail as plain unknown-keyword TypeErrors."""
     env = small_ir
-    with pytest.warns(DeprecationWarning, match="ServeConfig"):
-        server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                                max_queue=7, max_wait_ms=3.0,
-                                cache_entries=11, default_timeout_ms=90.0)
+    for kw in ({"max_queue": 7}, {"max_wait_ms": 3.0},
+               {"cache_entries": 11}, {"default_timeout_ms": 90.0}):
+        with pytest.raises(TypeError):
+            PipelineServer(Retrieve("BM25") % 10, env["backend"], **kw)
+    cfg = ServeConfig.default(max_queue=7, max_wait_ms=3.0,
+                              cache_entries=11, default_timeout_ms=90.0)
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"], cfg)
     assert server.config.max_queue == 7
-    assert server.config.max_wait_ms == 3.0
-    assert server.config.cache_entries == 11
     assert server.config.default_timeout_ms == 90.0
-
-
-def test_config_plus_legacy_kwargs_is_type_error(small_ir):
-    env = small_ir
-    with pytest.raises(TypeError, match="both"):
-        PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                       ServeConfig.default(), max_queue=7)
-    with pytest.raises(TypeError, match="unknown"):
-        PipelineServer(Retrieve("BM25") % 10, env["backend"],
-                       max_qeue=7)                      # typo'd kwarg
 
 
 # ---------------------------------------------------------------------------
 # submit API redesign
 # ---------------------------------------------------------------------------
 
-def test_submit_always_returns_list_with_compat_proxy(small_ir):
+def test_submit_always_returns_plain_list(small_ir):
+    """The one-release nq==1 attribute-forwarding proxy is gone: submit
+    returns a plain list for every burst size, and request attributes live
+    only on the elements (submit_one is the single-request API)."""
     env = small_ir
     server = PipelineServer(Retrieve("BM25") % 10, env["backend"])
     res = server.submit(_row(env["Q"], 0))
-    assert isinstance(res, list) and len(res) == 1
-    with pytest.warns(DeprecationWarning, match="submit_one"):
-        rid = res.rid                          # legacy attribute access
-    assert rid == res[0].rid
+    assert type(res) is list and len(res) == 1
+    with pytest.raises(AttributeError):
+        res.rid                                # no proxy forwarding
     multi = server.submit({k: np.asarray(v)[:3] for k, v in env["Q"].items()})
-    assert isinstance(multi, list) and len(multi) == 3
-    assert type(multi) is list                 # no proxy for real bursts
+    assert type(multi) is list and len(multi) == 3
     server.pump()
 
 
