@@ -212,6 +212,27 @@ def main() -> None:
                     "name": f"serve_{name}_{lvl['level']}_naive",
                     "us_per_call": round(nv["p95_ms"] * 1000, 1),
                     "derived": f"tput={nv['throughput_qps']}q/s"})
+        # --- observability: enabled-vs-disabled serve overhead -----------
+        ob = serve_bench.bench_obs(env)
+        (OUT / "obs.json").write_text(json.dumps(ob, indent=1))
+        print("\n== Observability: enabled-vs-disabled serve overhead ==")
+        print(f"disabled {ob['disabled_qps']} q/s vs enabled "
+              f"{ob['enabled_qps']} q/s "
+              f"(ratio {ob['enabled_over_disabled_qps']}, overhead "
+              f"{ob['overhead_pct']}%); trace events={ob['trace_events']} "
+              f"nested_serve_spans={ob['nested_serve_spans']} "
+              f"recorder={ob['flight_record_kinds']}")
+        csv_rows.append({
+            "name": "obs_enabled_serve",
+            "us_per_call": round(1e6 / max(ob["enabled_qps"], 1e-9), 1),
+            "derived": (f"ratio={ob['enabled_over_disabled_qps']},"
+                        f"overhead={ob['overhead_pct']}%,"
+                        f"spans={ob['nested_serve_spans']}")})
+        csv_rows.append({
+            "name": "obs_disabled_serve",
+            "us_per_call": round(1e6 / max(ob["disabled_qps"], 1e-9), 1),
+            "derived": ""})
+
         tt = sv.get("two_tenant")
         if tt:
             print(f"[two_tenant] pipelines={tt['pipelines']} "

@@ -170,6 +170,11 @@ def _server(pipe, backend, *, naive: bool) -> PipelineServer:
     cfg = (ServeConfig.default(max_queue=4096, cache_entries=0)
            .with_batching(max_batch=1 if naive else None,
                           max_wait_ms=0.0 if naive else 4.0))
+    if not naive:
+        # flight recorder only (no tracing): ring-buffer appends are cheap
+        # enough to leave on while measuring, and the overload level dumps
+        # the shed/drop decision log into the bench artifact
+        cfg = cfg.with_observability(True, tracing=False)
     return PipelineServer(pipe, backend, cfg)
 
 
@@ -308,6 +313,78 @@ def bench_rag(index, Q, dense, *, k: int = 8, k_in: int = 100,
     }
 
 
+def bench_obs(env, *, k: int = 10, k_in: int = 100,
+              n_requests: int = 64, repeats: int = 3, seed: int = 0) -> dict:
+    """Observability overhead: the same closed-loop burst served with
+    observability disabled (the production default — the metrics registry
+    is always on, so "disabled" IS the metrics-instrumented fast path)
+    vs fully enabled (span tracer + flight recorder).  Reports best-of-
+    ``repeats`` QPS per configuration and gates the enabled/disabled
+    ratio; the disabled path's own cost vs earlier pushes is covered by
+    the serve section's throughput trajectory.  The enabled run's Chrome
+    trace export is embedded so CI can assert the span tree actually
+    nests (request -> queue/batch children) and stays valid JSON."""
+    index = env["index"]
+    topics = env["formulations"]["T"]
+    Q = make_queries(np.asarray(topics.terms), np.asarray(topics.weights),
+                     np.asarray(topics.qids))
+    dense_holder = [None]
+
+    def _mk(obs: bool) -> PipelineServer:
+        be = JaxBackend(index, default_k=1000, query_chunk=8,
+                        dense=dense_holder[0])
+        dense_holder[0] = be.dense      # share the doc matrix across servers
+        cfg = (ServeConfig.default(max_queue=4096, cache_entries=0)
+               .with_batching(max_wait_ms=4.0))
+        if obs:
+            cfg = cfg.with_observability(True)
+        return PipelineServer(
+            (Retrieve("BM25", k=k_in) >> DenseRerank(alpha=0.3)) % k,
+            be, cfg)
+
+    rows = _rows(Q, n_requests, seed)
+
+    def _qps(server: PipelineServer) -> float:
+        server.warmup(Q)
+        for row in rows[:16]:                       # warm the measured path
+            server.submit_one(row)
+        server.pump()
+        best = 0.0
+        for _ in range(repeats):
+            t0 = time.monotonic()
+            reqs = [server.submit_one(row) for row in rows]
+            server.pump()
+            for r in reqs:
+                r.done.wait(300)
+            best = max(best, len(rows) / max(time.monotonic() - t0, 1e-9))
+        return best
+
+    disabled, enabled = _mk(False), _mk(True)
+    qps_off, qps_on = _qps(disabled), _qps(enabled)
+    trace = enabled.trace_export()
+    evs = trace["traceEvents"]
+    ids = {e["args"]["span_id"] for e in evs}
+    n_nested = sum(1 for e in evs
+                   if e.get("cat") == "serve"
+                   and e["args"].get("parent_id") in ids)
+    ratio = round(qps_on / max(qps_off, 1e-9), 3)
+    return {
+        "n_requests": n_requests,
+        "repeats": repeats,
+        "disabled_qps": round(qps_off, 1),
+        "enabled_qps": round(qps_on, 1),
+        "enabled_over_disabled_qps": ratio,
+        "overhead_pct": round(100.0 * (1.0 - ratio), 1),
+        "trace_events": len(evs),
+        "nested_serve_spans": n_nested,
+        "flight_record_kinds": (enabled.recorder.kinds()
+                                if enabled.recorder else {}),
+        "trace": trace,
+        "gated": {"enabled_over_disabled_qps":
+                  {"value": ratio, "better": "higher"}},
+    }
+
+
 def bench_serving(env, *, k: int = 10, k_in: int = 100, seed: int = 0) -> dict:
     index = env["index"]
     topics = env["formulations"]["T"]
@@ -355,6 +432,13 @@ def bench_serving(env, *, k: int = 10, k_in: int = 100, seed: int = 0) -> dict:
                 (sat["batched"]["throughput_qps"]
                  > sat["naive"]["throughput_qps"]),
         }
+        # post-mortem artifact: the flight recorder's view of the overload
+        # level — every shed carries the service-model inputs (S(n), slack)
+        # the scheduler decided with
+        over = by_name["overload"]
+        over["flight_record"] = batched.flight_record(last=64)
+        over["flight_record_kinds"] = (batched.recorder.kinds()
+                                       if batched.recorder else {})
         out["workloads"][name] = wl
         out["gated"][f"{name}.light.p95_ms"] = {
             "value": light["batched"]["p95_ms"], "better": "lower"}

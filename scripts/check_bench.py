@@ -14,7 +14,7 @@ import json
 import sys
 
 REQUIRED = ("engine_scaling", "fusion", "rq1", "rq2", "dense", "serve",
-            "autotune")
+            "autotune", "obs")
 
 #: every serve workload must report at least this many offered-load levels
 #: (p50/p95/p99 batched vs naive at light/mid/sat/overload)
@@ -184,6 +184,50 @@ def main() -> int:
         return 1
     if "rag.sat.decode_tokens_per_s" not in serve["gated"]:
         print("FAIL: serve gated block lacks rag.sat.decode_tokens_per_s",
+              file=sys.stderr)
+        return 1
+    # overload post-mortems must ship the scheduler's decision log
+    for name in SERVE_WORKLOADS:
+        over = {lvl.get("level"): lvl
+                for lvl in sw[name]["levels"]}.get("overload", {})
+        fr = over.get("flight_record")
+        if not fr:
+            print(f"FAIL: serve workload {name!r} overload level lacks a "
+                  "flight_record dump", file=sys.stderr)
+            return 1
+        bad_ev = [e for e in fr if "kind" not in e or "t" not in e]
+        if bad_ev:
+            print(f"FAIL: serve workload {name!r} flight_record has "
+                  f"malformed events: {bad_ev[:3]}", file=sys.stderr)
+            return 1
+    obs = summary["obs"]
+    for field in ("disabled_qps", "enabled_qps", "enabled_over_disabled_qps"):
+        if obs.get(field) is None:
+            print(f"FAIL: obs section lacks {field!r}", file=sys.stderr)
+            return 1
+    if "enabled_over_disabled_qps" not in obs.get("gated", {}):
+        print("FAIL: obs gated block lacks enabled_over_disabled_qps",
+              file=sys.stderr)
+        return 1
+    trace = obs.get("trace") or {}
+    evs = trace.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        print("FAIL: obs section lacks a Chrome trace export "
+              "(trace.traceEvents)", file=sys.stderr)
+        return 1
+    malformed = [e for e in evs
+                 if not {"name", "ph", "ts", "pid", "tid"} <= set(e)]
+    if malformed:
+        print(f"FAIL: obs trace has malformed trace events: "
+              f"{malformed[:3]}", file=sys.stderr)
+        return 1
+    span_ids = {e["args"].get("span_id") for e in evs if "args" in e}
+    n_nested = sum(1 for e in evs
+                   if e.get("cat") == "serve"
+                   and e.get("args", {}).get("parent_id") in span_ids)
+    if n_nested < 1:
+        print("FAIL: obs trace export contains no nested serve span "
+              "(no event's parent_id matches another's span_id)",
               file=sys.stderr)
         return 1
     at = summary["autotune"]

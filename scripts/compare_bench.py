@@ -77,13 +77,29 @@ def serve_metrics(summary: dict) -> dict[str, tuple[float, str]]:
     return out
 
 
+def obs_metrics(summary: dict) -> dict[str, tuple[float, str]]:
+    """name -> (value, direction) for the observability overhead gate:
+    the obs bench pre-selects the enabled/disabled throughput ratio into
+    ``obs.gated`` (higher is better — a falling ratio means tracing got
+    more expensive relative to the plain serve path)."""
+    out: dict[str, tuple[float, str]] = {}
+    for name, ent in ((summary.get("obs") or {}).get("gated") or {}).items():
+        try:
+            out[f"obs.{name}"] = (float(ent["value"]),
+                                  str(ent.get("better", "higher")))
+        except (TypeError, KeyError, ValueError):
+            print(f"  obs.{name}: malformed gated entry {ent!r} (skipped)")
+    return out
+
+
 def collect_metrics(summary: dict, label: str) -> dict[str, tuple[float, str]]:
     """All gated metrics of one summary.  Extraction must never take the
     gate down: a summary written by an older revision (an artifact that
     predates a section or a schema change) is degraded to 'fewer metrics',
     with a warning, instead of crashing the job."""
     out: dict[str, tuple[float, str]] = {}
-    for extract in (fused_qps_metrics, dense_pq_metrics, serve_metrics):
+    for extract in (fused_qps_metrics, dense_pq_metrics, serve_metrics,
+                    obs_metrics):
         try:
             out.update(extract(summary))
         except Exception as e:      # old-schema artifact: warn and skip
@@ -93,7 +109,7 @@ def collect_metrics(summary: dict, label: str) -> dict[str, tuple[float, str]]:
 
 
 def missing_sections(prev: dict, cur: dict) -> list[str]:
-    return [s for s in ("fusion", "dense", "serve", "autotune")
+    return [s for s in ("fusion", "dense", "serve", "autotune", "obs")
             if cur.get(s) and not prev.get(s)]
 
 

@@ -218,6 +218,10 @@ class BackendDescriptor:
     autotune_band: float = 0.25
     probe_queries: int = 4
     probe_repeats: int = 2
+    #: route compile-pass and plan/trie execution spans to the
+    #: process-global tracer (``repro.obs.set_tracer``); off, the
+    #: instrumentation sites cost one attribute check
+    observability: bool = False
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -272,6 +276,11 @@ class BackendDescriptor:
         if probe_repeats is not None:
             kw["probe_repeats"] = probe_repeats
         return dataclasses.replace(self, **kw)
+
+    def with_observability(self, enabled: bool = True) -> "BackendDescriptor":
+        """Descriptor whose compiles/plan executions emit spans through the
+        process-global tracer (install one with ``repro.obs.set_tracer``)."""
+        return dataclasses.replace(self, observability=enabled)
 
     def calibrated(self, fit: dict) -> "BackendDescriptor":
         """Descriptor with peaks replaced by a ``hlo_cost.fit_peaks``

@@ -42,6 +42,15 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common import LRU, select_ladder_bucket
 from repro.launch.mesh import make_query_mesh
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import NOOP_TRACER
+
+
+def _key_label(key) -> str:
+    """Short printable form of a jit-cache key for trace events (full keys
+    embed content digests and param tuples — too long for a span arg)."""
+    s = str(key)
+    return s if len(s) <= 96 else s[:93] + "..."
 
 
 def default_bucket_ladder(n_devices: int, *, base: int = 8,
@@ -111,7 +120,8 @@ class ShardedQueryEngine:
     def __init__(self, mesh=None, *, ladder: Sequence[int] | None = None,
                  max_devices: int | None = None,
                  max_jit_entries: int | None = 512,
-                 max_chunk_entries: int | None = 64):
+                 max_chunk_entries: int | None = 64,
+                 registry: MetricsRegistry | None = None):
         self.mesh = mesh if mesh is not None else make_query_mesh(
             max_devices=max_devices)
         # on a 2-D (query x doc-shard) mesh only the "data" axis carries
@@ -138,20 +148,75 @@ class ShardedQueryEngine:
         #: the lossless total lives in ``n_compiles_total``.
         self.compiles: LRU = LRU(None if max_jit_entries is None
                                  else 4 * max_jit_entries)
-        self.n_compiles_total = 0
         #: id(full array) -> (weakref, chunk plan, [sharded pieces]).
         #: LRU-bounded for the same reason (entries also die eagerly with
         #: their source array via the weakref callback).
         self._chunk_cache: LRU = LRU(max_chunk_entries)
-        self.n_dispatches = 0
-        self.n_chunk_cache_hits = 0
-        self.n_chunk_cache_misses = 0
+        # counters are registry series (one source of truth for stats());
+        # tracer/recorder are attached by the serving layer or the
+        # descriptor's observability flag — NOOP/None by default, so the
+        # disabled hot path is one attribute check
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._m_dispatches = self.metrics.counter(
+            "engine_dispatches_total", "chunk/pinned program dispatches")
+        self._m_compiles = self.metrics.counter(
+            "engine_compiles_total", "jit compilations by cause", ("cause",))
+        for c in ("cold_rung", "ladder_miss", "pinned"):
+            self._m_compiles.touch((c,))
+        self._m_chunk = self.metrics.counter(
+            "engine_chunk_cache_total", "validated chunk-cache lookups",
+            ("result",))
+        for r in ("hit", "miss"):
+            self._m_chunk.touch((r,))
+        self.metrics.gauge(
+            "engine_jit_cache_entries",
+            "resident compiled executables").set_fn(lambda: len(self._jit_cache))
+        self.tracer = NOOP_TRACER
+        self.recorder = None
         #: bucket -> EWMA of measured batch service seconds, fed back by the
         #: serving layer (``note_service_time``) after each executed
         #: micro-batch; the deadline-aware scheduler prices its
         #: shed-before-execute decisions off these observations
         self._service_ewma: dict[int, float] = {}
         self._service_alpha = 0.2
+
+    # -- observability ------------------------------------------------------
+    def attach_observability(self, tracer=None, recorder=None) -> None:
+        """Point the engine's compile/dispatch events at a tracer and/or
+        flight recorder (the serving layer calls this when its config opts
+        in; several servers sharing one engine share the last attachment)."""
+        if tracer is not None:
+            self.tracer = tracer
+        if recorder is not None:
+            self.recorder = recorder
+
+    @property
+    def n_compiles_total(self) -> int:
+        return int(sum(self._m_compiles.series().values()))
+
+    @property
+    def n_dispatches(self) -> int:
+        return int(self._m_dispatches.value())
+
+    @property
+    def n_chunk_cache_hits(self) -> int:
+        return int(self._m_chunk.value(("hit",)))
+
+    @property
+    def n_chunk_cache_misses(self) -> int:
+        return int(self._m_chunk.value(("miss",)))
+
+    def _note_compile(self, cause: str, key, bucket) -> None:
+        """Count one jit compilation and emit its attributed-cause event:
+        ``cold_rung`` (first rung for a never-seen stage/signature),
+        ``ladder_miss`` (additional rung for a known stage, or a re-compile
+        after LRU eviction), ``pinned`` (fixed-shape decode program)."""
+        self._m_compiles.inc(1, (cause,))
+        self.tracer.event("engine.jit_compile", "engine", cause=cause,
+                          bucket=bucket, key=_key_label(key))
+        if self.recorder is not None:
+            self.recorder.record("recompile", cause=cause, bucket=bucket,
+                                 key=_key_label(key))
 
     # -- chunk planning -----------------------------------------------------
     def chunk_plan(self, nq: int) -> tuple[tuple[int, int, int], ...]:
@@ -197,9 +262,9 @@ class ShardedQueryEngine:
         slice/pad/device_put entirely."""
         ent = self._chunk_cache.get(id(arr))
         if ent is not None and ent[0]() is arr and ent[1] == plan:
-            self.n_chunk_cache_hits += 1
+            self._m_chunk.inc(1, ("hit",))
             return ent[2]
-        self.n_chunk_cache_misses += 1
+        self._m_chunk.inc(1, ("miss",))
         pad_mod = np if isinstance(arr, np.ndarray) else jnp
         pieces = []
         for start, n, bucket in plan:
@@ -219,8 +284,10 @@ class ShardedQueryEngine:
             vf = jax.jit(jax.vmap(fn))
             self._jit_cache.put(jk, vf)
             ck = (key, sig)
-            self.compiles.put(ck, (self.compiles.get(ck, 0) or 0) + 1)
-            self.n_compiles_total += 1
+            prior = self.compiles.get(ck, 0) or 0
+            self.compiles.put(ck, prior + 1)
+            self._note_compile("cold_rung" if prior == 0 else "ladder_miss",
+                              key, bucket)
         return vf
 
     def max_compiles_per_stage(self) -> int:
@@ -319,7 +386,7 @@ class ShardedQueryEngine:
         sig = tuple((tuple(getattr(x, "shape", ())),
                      str(getattr(x, "dtype", type(x).__name__)))
                     for x in leaves)
-        self.n_dispatches += 1
+        self._m_dispatches.inc()
         if program.key is None:
             return jax.jit(program.fn, donate_argnums=donate_argnums)(*args)
         jk = (program.key, "pinned", sig)
@@ -329,7 +396,7 @@ class ShardedQueryEngine:
             self._jit_cache.put(jk, vf)
             ck = (program.key, "pinned")
             self.compiles.put(ck, (self.compiles.get(ck, 0) or 0) + 1)
-            self.n_compiles_total += 1
+            self._note_compile("pinned", program.key, None)
         return vf(*args)
 
     def _run_plan(self, program: StageProgram, args, plan):
@@ -342,8 +409,12 @@ class ShardedQueryEngine:
             # keyless calls compile fresh and stay out of the persistent
             # cache (an id()-keyed entry could never be reused anyway)
             vf = anon_vf if key is None else self._jitted(key, fn, bucket, sig)
-            outs.append(vf(*[p[i] for p in pieces]))
-            self.n_dispatches += 1
+            # span covers host-side dispatch only — JAX dispatch is async,
+            # so device compute completes after the span closes
+            with self.tracer.span("engine.dispatch", "engine", bucket=bucket,
+                                  n=n, key=_key_label(key)):
+                outs.append(vf(*[p[i] for p in pieces]))
+            self._m_dispatches.inc()
         full = self._materialize(outs, plan)
         self._remember_outputs(full, outs, plan)
         return full

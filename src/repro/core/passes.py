@@ -46,6 +46,8 @@ from typing import Callable
 
 from repro.core import stages as S
 from repro.core.descriptor import BackendDescriptor, as_descriptor
+from repro.obs.metrics import CounterMap, MetricsRegistry
+from repro.obs.tracing import NOOP_TRACER, get_tracer
 from repro.core.ir import (COMBINATOR_KINDS, Op, Schema, SchemaError, chain,
                            leaf, lower, pretty)
 from repro.core.transformer import Transformer
@@ -222,13 +224,25 @@ class PassContext:
         self.snapshots: list[tuple[str, Op]] = []
         self.keep_snapshots = keep_snapshots
         self.timings: list[tuple[str, float]] = []
+        #: per-compile metrics registry; ``pipeline.explain()`` and the
+        #: compile report read tuning counts through it (one source of
+        #: truth with the serving-side registries)
+        self.metrics = MetricsRegistry()
+        #: spans route to the process-global tracer only when the
+        #: descriptor opted in — the default is the shared no-op
+        self.tracer = (get_tracer()
+                       if getattr(self.descriptor, "observability", False)
+                       else NOOP_TRACER)
         #: the acceptance counters for the warm-reuse property: a compile
         #: served entirely from a persisted TuningProfile must show zero
-        #: gate_estimates (candidate compiles) and zero probe_measurements
-        self.counters: dict[str, int] = {
-            "gate_estimates": 0, "probe_measurements": 0,
-            "profile_hits": 0, "profile_misses": 0,
-        }
+        #: gate_estimates (candidate compiles) and zero probe_measurements.
+        #: Dict-shaped view over the registry's ``compile_tuning_total``.
+        self.counters = CounterMap(
+            self.metrics.counter(
+                "compile_tuning_total",
+                "fusion-gate and autotune work per compile", ("counter",)),
+            ("gate_estimates", "probe_measurements",
+             "profile_hits", "profile_misses"))
 
 
 class Pass:
@@ -245,12 +259,15 @@ class PassManager:
     def run(self, op: Op, pctx: PassContext) -> Op:
         if pctx.keep_snapshots:
             pctx.snapshots.append(("lower", op))
-        for p in self.passes:
-            t0 = time.perf_counter()
-            op = p.run(op, pctx)
-            pctx.timings.append((p.name, time.perf_counter() - t0))
-            if pctx.keep_snapshots:
-                pctx.snapshots.append((p.name, op))
+        with pctx.tracer.span("compile.pipeline", "compile",
+                              n_passes=len(self.passes)):
+            for p in self.passes:
+                t0 = time.perf_counter()
+                with pctx.tracer.span(f"compile.pass.{p.name}", "compile"):
+                    op = p.run(op, pctx)
+                pctx.timings.append((p.name, time.perf_counter() - t0))
+                if pctx.keep_snapshots:
+                    pctx.snapshots.append((p.name, op))
         return op
 
 

@@ -41,6 +41,7 @@ from repro.core.compiler import (Context, JaxBackend, _execute, content_token,
                                  derive_token)
 from repro.core.passes import compile_pipeline
 from repro.core.transformer import Transformer
+from repro.obs.tracing import NOOP_TRACER, get_tracer
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +288,9 @@ class ExperimentPlan:
                 cache: ArtifactCache | None = None,
                 record: str | None = "cold") -> list:
         ctx = ctx or Context(self.backend)
+        desc = getattr(self.backend, "descriptor", None)
+        tracer = (get_tracer() if getattr(desc, "observability", False)
+                  else NOOP_TRACER)
         qtok = ctx.source_token(Q, None)
         idx_dig = backend_digest(self.backend) if cache is not None else None
         results: list = [None] * len(self._leaves)
@@ -328,9 +332,21 @@ class ExperimentPlan:
             for i in leaf_index.get(id(node), ()):
                 results[i] = Ri if Ri is not None else Qi
             for child in node.children.values():
-                visit(child, *run_stage(child, Qi, Ri, toki))
+                # span covers the child's whole subtree, so the exported
+                # trace nests exactly like the trie (children inside their
+                # shared prefix); cache_hit lands on the span after run
+                with tracer.span("plan.stage", "plan",
+                                 stage=child.stage.label(),
+                                 depth=child.depth,
+                                 n_pipelines=child.n_shared) as sp:
+                    out = run_stage(child, Qi, Ri, toki)
+                    sp.set(cache_hit=child.cache_hit)
+                    visit(child, *out)
 
-        visit(self.root, Q, None, qtok)
+        with tracer.span("plan.execute", "plan",
+                         n_stage_executions=self.n_stage_executions,
+                         n_stage_requests=self.n_stage_requests):
+            visit(self.root, Q, None, qtok)
         return results
 
     # -- timing attribution --------------------------------------------------

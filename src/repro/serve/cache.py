@@ -31,6 +31,7 @@ import hashlib
 import numpy as np
 
 from repro.common import LRU
+from repro.obs.metrics import MetricsRegistry
 
 
 def query_digest(Q_row) -> str:
@@ -65,17 +66,34 @@ class StageResultCache:
     hit, surfaced per tenant in ``server.stats()``.
     """
 
-    def __init__(self, maxsize: int | None = 4096):
+    def __init__(self, maxsize: int | None = 4096,
+                 registry: MetricsRegistry | None = None):
         self.lru = LRU(maxsize)
         self.enabled = maxsize is None or maxsize > 0
-        #: request-level counters: ONE hit or miss per lookup_deepest call
-        #: (the raw LRU counters would count every probed depth of the
-        #: chain, making 'hit rate' uninterpretable per request)
-        self.hits = 0
-        self.misses = 0
-        #: hits served from an entry a *different* pipeline wrote (the
-        #: online realisation of cross-pipeline prefix reuse)
-        self.cross_pipeline_hits = 0
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        # request-level counters: ONE hit or miss per lookup_deepest call
+        # (the raw LRU counters would count every probed depth of the
+        # chain, making 'hit rate' uninterpretable per request); kept as
+        # registry series, surfaced as attributes for the legacy readers
+        self._lookups = self.metrics.counter(
+            "stage_cache_lookups_total",
+            "request-level stage-cache lookups", ("result",))
+        for r in ("hit", "miss", "cross_pipeline_hit"):
+            self._lookups.touch((r,))
+
+    @property
+    def hits(self) -> int:
+        return int(self._lookups.value(("hit",)))
+
+    @property
+    def misses(self) -> int:
+        return int(self._lookups.value(("miss",)))
+
+    @property
+    def cross_pipeline_hits(self) -> int:
+        """Hits served from an entry a *different* pipeline wrote (the
+        online realisation of cross-pipeline prefix reuse)."""
+        return int(self._lookups.value(("cross_pipeline_hit",)))
 
     # -- lookup -------------------------------------------------------------
     def lookup_deepest(self, prefix_digests, qdigest: str,
@@ -93,12 +111,12 @@ class StageResultCache:
                 continue
             val = self.lru.get(key)      # refreshes recency
             if val is not None:          # (may have raced an eviction)
-                self.hits += 1
+                self._lookups.inc(labels=("hit",))
                 Q_row, R_row, writer = val
                 if writer != reader:
-                    self.cross_pipeline_hits += 1
+                    self._lookups.inc(labels=("cross_pipeline_hit",))
                 return depth, (Q_row, R_row), writer
-        self.misses += 1
+        self._lookups.inc(labels=("miss",))
         return 0, None, None
 
     def store(self, prefix_digest: str, qdigest: str, Q_row, R_row,

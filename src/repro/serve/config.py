@@ -68,6 +68,15 @@ class ServeConfig:
     # -- tracing ------------------------------------------------------------
     trace_stages: bool = False
     trace_capacity: int = 2048
+    # -- observability (span tracing + flight recorder; metrics are
+    # -- always-on registry counters and have no switch) ---------------------
+    #: span tracing of the serve lifecycle (admit -> queue -> batch ->
+    #: stages -> decode -> reply), exportable as Chrome trace-event JSON
+    obs_tracing: bool = False
+    #: flight recorder: bounded ring of scheduler/engine decision events
+    obs_recorder: bool = False
+    obs_trace_events: int = 65536
+    obs_recorder_events: int = 1024
 
     def __post_init__(self):
         if not self.lanes:
@@ -150,6 +159,31 @@ class ServeConfig:
             kw["trace_stages"] = bool(stages)
         if capacity is not None:
             kw["trace_capacity"] = int(capacity)
+        return self.replace(**kw)
+
+    def with_observability(self, enabled: bool = True, *,
+                           tracing: bool | None = None,
+                           recorder: bool | None = None,
+                           trace_events: int | None = None,
+                           recorder_events: int | None = None
+                           ) -> "ServeConfig":
+        """Opt in to span tracing and/or the flight recorder.
+
+        ``with_observability()`` turns both on; ``tracing=``/``recorder=``
+        override the master switch per layer (e.g. recorder-only for an
+        overload post-mortem without per-request span cost).  Metrics are
+        not gated here — the registry is always on (an increment is a dict
+        lookup); these switches govern the layers that allocate per-event
+        records.
+        """
+        kw: dict = {
+            "obs_tracing": bool(enabled if tracing is None else tracing),
+            "obs_recorder": bool(enabled if recorder is None else recorder),
+        }
+        if trace_events is not None:
+            kw["obs_trace_events"] = int(trace_events)
+        if recorder_events is not None:
+            kw["obs_recorder_events"] = int(recorder_events)
         return self.replace(**kw)
 
     # -- queries ------------------------------------------------------------

@@ -72,10 +72,16 @@ import time
 from collections import deque
 
 from repro.common import select_ladder_bucket
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import NOOP_TRACER
 from repro.serve.request import (DeadlineUnmeetable, ServeRequest,
                                  ServerOverloaded)
 
 _INF = float("inf")
+
+
+def _ms(seconds: float | None) -> float | None:
+    return None if seconds is None else round(1000.0 * seconds, 3)
 
 
 @dataclasses.dataclass
@@ -107,7 +113,9 @@ class MicroBatchScheduler:
                  max_wait_ms: float = 5.0, max_batch: int | None = None,
                  lanes=(("default", 1.0),), default_lane: str | None = None,
                  adaptive_wait: bool = False, shed: bool = True,
-                 service_ewma_alpha: float = 0.2):
+                 service_ewma_alpha: float = 0.2,
+                 registry: MetricsRegistry | None = None,
+                 tracer=None, recorder=None):
         self.ladder = tuple(sorted(int(b) for b in ladder))
         self.max_queue = int(max_queue)
         self.max_wait_s = float(max_wait_ms) / 1000.0
@@ -135,16 +143,48 @@ class MicroBatchScheduler:
         self._slot_ewma: float | None = None      # seconds per ladder slot
         self._gap_ewma: float | None = None       # seconds between arrivals
         self._last_arrival: float | None = None
-        self.n_submitted = 0
-        self.n_rejected = 0
-        self.n_shed_submit = 0
-        self.n_shed_queue = 0
+        # counters live in the metrics registry (one source of truth for
+        # stats()); tracer/recorder are the opt-in decision-event sinks
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NOOP_TRACER
+        self.recorder = recorder
+        self._events = self.metrics.counter(
+            "sched_requests_total", "scheduler admission/shedding events",
+            ("event",))
+        for e in ("submitted", "rejected", "shed_submit", "shed_queue",
+                  "decode_submitted", "decode_taken"):
+            self._events.touch((e,))
+        self._batch_close = self.metrics.counter(
+            "sched_batches_total", "closed batches by reason", ("reason",))
         #: decode-side EDF queue: (deadline key, seq, request) of requests
         #: whose retrieval prefix is done and whose prompt awaits a free
         #: KV-cache slot in the decode pool
         self._decode_heap: list = []
-        self.n_decode_submitted = 0
-        self.n_decode_taken = 0
+
+    # -- registry-backed views (legacy attribute surface) --------------------
+    @property
+    def n_submitted(self) -> int:
+        return int(self._events.value(("submitted",)))
+
+    @property
+    def n_rejected(self) -> int:
+        return int(self._events.value(("rejected",)))
+
+    @property
+    def n_shed_submit(self) -> int:
+        return int(self._events.value(("shed_submit",)))
+
+    @property
+    def n_shed_queue(self) -> int:
+        return int(self._events.value(("shed_queue",)))
+
+    @property
+    def n_decode_submitted(self) -> int:
+        return int(self._events.value(("decode_submitted",)))
+
+    @property
+    def n_decode_taken(self) -> int:
+        return int(self._events.value(("decode_taken",)))
 
     # -- feedback ------------------------------------------------------------
     def _ewma(self, old: float | None, new: float) -> float:
@@ -263,7 +303,11 @@ class MicroBatchScheduler:
         :class:`DeadlineUnmeetable` before it occupies queue space."""
         with self._cv:
             if self._n_queued + len(reqs) > self.max_queue:
-                self.n_rejected += len(reqs)
+                self._events.inc(len(reqs), ("rejected",))
+                if self.recorder is not None:
+                    self.recorder.record(
+                        "reject_overload", n=len(reqs),
+                        queued=self._n_queued, max_queue=self.max_queue)
                 raise ServerOverloaded(
                     f"request queue full ({self._n_queued}/{self.max_queue}, "
                     f"burst of {len(reqs)}); shedding load")
@@ -272,9 +316,22 @@ class MicroBatchScheduler:
                 doomed = [r for r in reqs
                           if self._infeasible(r, now, self._n_queued)]
                 if doomed:
-                    self.n_rejected += len(reqs)
-                    self.n_shed_submit += len(reqs)
+                    self._events.inc(len(reqs), ("rejected",))
+                    self._events.inc(len(reqs), ("shed_submit",))
                     S = self._service_ewma
+                    if self.recorder is not None:
+                        r0 = doomed[0]
+                        self.recorder.record(
+                            "shed_door", n=len(reqs),
+                            rid=r0.trace.rid, queued=self._n_queued,
+                            service_ewma_ms=_ms(S),
+                            s1_ms=_ms(self._bucket_est(1)),
+                            slot_ms=_ms(self._slot_ewma),
+                            slack_ms=(None if r0.deadline is None
+                                      else _ms(r0.deadline - now)))
+                    self.tracer.event(
+                        "sched.shed_door", "sched", n=len(reqs),
+                        queued=self._n_queued, service_ewma_ms=_ms(S))
                     raise DeadlineUnmeetable(
                         f"deadline cannot be met: ~{self._n_queued} queued, "
                         f"EWMA batch service "
@@ -297,7 +354,13 @@ class MicroBatchScheduler:
                 lane.n_submitted += 1
                 self._arrivals.append(req)
                 self._n_queued += 1
-            self.n_submitted += len(reqs)
+                if self.recorder is not None:
+                    self.recorder.record(
+                        "admit", rid=req.trace.rid, lane=req.lane,
+                        queued=self._n_queued,
+                        slack_ms=(None if req.deadline is None
+                                  else _ms(req.deadline - now)))
+            self._events.inc(len(reqs), ("submitted",))
             self._cv.notify()
 
     def qsize(self) -> int:
@@ -367,9 +430,16 @@ class MicroBatchScheduler:
             self._n_queued -= 1
             if self.shed_enabled and self._infeasible(req, now, 0,
                                                       own_n=len(live) + 1):
-                self.n_shed_queue += 1
+                self._events.inc(1, ("shed_queue",))
                 req.trace.shed = True
                 shed.append(req)
+                if self.recorder is not None:
+                    self.recorder.record(
+                        "shed_queue", rid=req.trace.rid, lane=req.lane,
+                        own_n=len(live) + 1,
+                        s_own_ms=_ms(self._bucket_est(len(live) + 1)),
+                        slack_ms=(None if req.deadline is None
+                                  else _ms(req.deadline - now)))
                 continue
             lane.vtime += 1.0 / lane.weight
             lane.n_taken += 1
@@ -385,6 +455,19 @@ class MicroBatchScheduler:
             for ln in self.lanes.values():
                 if ln.vtime < vbase:
                     ln.vtime = vbase
+        self._batch_close.inc(1, (reason,))
+        rung = select_ladder_bucket(self.ladder, max(len(live), 1),
+                                    clamp=True)
+        if self.recorder is not None:
+            self.recorder.record(
+                "batch_close", reason=reason, size=len(live), rung=rung,
+                shed=len(shed), cap=cap, queued_after=self._n_queued,
+                s_rung_ms=_ms(self._bucket_est(rung)))
+        self.tracer.event(
+            "sched.batch_close", "sched", reason=reason, size=len(live),
+            rung=rung, shed=len(shed), cap=cap,
+            s_rung_ms=_ms(self._bucket_est(rung)),
+            slot_ms=_ms(self._slot_ewma))
         return Batch(requests=live, reason=reason, t_closed=now, shed=shed)
 
     def next_batch(self, *, block: bool = False, timeout: float | None = None,
@@ -431,7 +514,7 @@ class MicroBatchScheduler:
             self._seq += 1
             dl = _INF if req.deadline is None else req.deadline
             heapq.heappush(self._decode_heap, (dl, self._seq, req))
-            self.n_decode_submitted += 1
+            self._events.inc(1, ("decode_submitted",))
 
     def decode_take(self, n: int) -> list:
         """Admit up to ``n`` requests into freed decode slots, most urgent
@@ -441,7 +524,7 @@ class MicroBatchScheduler:
         with self._cv:
             while self._decode_heap and len(out) < n:
                 _, _, req = heapq.heappop(self._decode_heap)
-                self.n_decode_taken += 1
+                self._events.inc(1, ("decode_taken",))
                 out.append(req)
         return out
 

@@ -45,6 +45,7 @@ synchronously with :meth:`pump`.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import time
 from typing import Any
@@ -53,6 +54,7 @@ import jax
 import numpy as np
 
 from repro.core import ir
+from repro.obs import NOOP_TRACER, FlightRecorder, MetricsRegistry, Tracer
 from repro.core.compiler import Context, _execute
 from repro.core.passes import compile_pipeline
 from repro.core.plan import chain_prefix_digests
@@ -114,18 +116,31 @@ class PipelineServer:
         ladder = (self.engine.ladder if self.engine is not None
                   else _FALLBACK_LADDER)
         cfg = self.config
+        # one registry per server: every counter stats() reports lives
+        # here; tracer/recorder are the opt-in layers (ServeConfig
+        # .with_observability) and default to shared no-ops
+        self.metrics = MetricsRegistry()
+        self.tracer = (Tracer(enabled=True, capacity=cfg.obs_trace_events)
+                       if cfg.obs_tracing else NOOP_TRACER)
+        self.recorder = (FlightRecorder(cfg.obs_recorder_events)
+                         if cfg.obs_recorder else None)
         self.scheduler = MicroBatchScheduler(
             ladder=ladder, max_queue=cfg.max_queue,
             max_wait_ms=cfg.max_wait_ms, max_batch=cfg.max_batch,
             lanes=cfg.lanes, default_lane=cfg.default_lane,
             adaptive_wait=cfg.adaptive_wait, shed=cfg.shed,
-            service_ewma_alpha=cfg.service_ewma_alpha)
+            service_ewma_alpha=cfg.service_ewma_alpha,
+            registry=self.metrics, tracer=self.tracer,
+            recorder=self.recorder)
         self.cache = cache if cache is not None \
-            else StageResultCache(cfg.cache_entries)
+            else StageResultCache(cfg.cache_entries, registry=self.metrics)
         self.cache_stages = cfg.cache_stages
         self.default_timeout_ms = cfg.default_timeout_ms
         self.trace_stages = cfg.trace_stages
-        self.log = TraceLog(cfg.trace_capacity)
+        self.log = TraceLog(cfg.trace_capacity, registry=self.metrics)
+        if self.engine is not None and (cfg.obs_tracing or cfg.obs_recorder):
+            self.engine.attach_observability(tracer=self.tracer,
+                                             recorder=self.recorder)
         self._rid = 0
         self._rid_lock = threading.Lock()
         self._warm_compiles: int | None = None
@@ -622,8 +637,97 @@ class PipelineServer:
         tr.late = (not timed_out and not tr.errored
                    and req.deadline is not None and t > req.deadline)
         req.result = result
+        if timed_out and self.recorder is not None and not tr.shed:
+            # shed drops are recorded by the scheduler at decision time
+            # (with the S(n) inputs); this covers expiry in queue/decode
+            self.recorder.record("deadline_drop", rid=tr.rid,
+                                 tenant=tr.tenant, lane=tr.lane,
+                                 queue_wait_ms=round(tr.queue_wait_ms, 3))
+        if self.tracer.enabled:
+            self._emit_request_spans(tr)
         self.log.record(tr)
         req.done.set()
+
+    def _emit_request_spans(self, tr) -> None:
+        """Retrospective per-request lifecycle spans, emitted at finish
+        from the ``RequestTrace`` timestamps.  Spans link by explicit
+        parent id (nesting is data, not wall-clock containment), so a
+        request admitted on the caller thread and executed on the serving
+        thread still exports as one nested tree; each request gets its
+        own synthetic Perfetto track (``tid = rid``)."""
+        tracer, rel, tid = self.tracer, self.tracer.rel, tr.rid
+        outcome = ("errors" if tr.errored else "shed" if tr.shed
+                   else "timed_out" if tr.timed_out
+                   else "late" if tr.late else "served")
+        root = tracer.add_span(
+            "serve.request", rel(tr.t_arrival), rel(tr.t_done), cat="serve",
+            tid=tid, rid=tr.rid, tenant=tr.tenant, lane=tr.lane,
+            outcome=outcome, latency_ms=round(tr.latency_ms, 3))
+        if not tr.t_scheduled:
+            return
+        tracer.add_span("serve.queue", rel(tr.t_arrival),
+                        rel(tr.t_scheduled), cat="serve", parent=root,
+                        tid=tid, queue_wait_ms=round(tr.queue_wait_ms, 3))
+        # decode start = first generated token; before it, the request
+        # was riding its retrieval micro-batch
+        t_dec0 = (tr.t_arrival + tr.ttft_ms / 1000.0 if tr.ttft_ms else None)
+        batch = tracer.add_span(
+            "serve.batch", rel(tr.t_scheduled),
+            rel(t_dec0 if t_dec0 is not None else tr.t_done), cat="serve",
+            parent=root, tid=tid, reason=tr.batch_reason,
+            batch_size=tr.batch_size, bucket=tr.bucket,
+            cache_hit_depth=tr.cache_hit_depth,
+            cross_prefix_hit=tr.cross_prefix_hit)
+        t = tr.t_scheduled            # stage stamps are durations only:
+        for label, ms in tr.stage_ms:  # lay them end-to-end from close
+            tracer.add_span(f"serve.stage:{label}", rel(t),
+                            rel(t + ms / 1000.0), cat="serve",
+                            parent=batch, tid=tid, ms=ms)
+            t += ms / 1000.0
+        if t_dec0 is not None:
+            tracer.add_span("serve.decode", rel(t_dec0), rel(tr.t_done),
+                            cat="serve", parent=root, tid=tid,
+                            n_tokens=tr.n_tokens,
+                            ttft_ms=round(tr.ttft_ms, 3))
+
+    # -- observability ------------------------------------------------------
+    def trace_export(self, path: str | None = None) -> dict:
+        """Chrome trace-event JSON of every retained span (request
+        lifecycles, scheduler batch closes, engine dispatches and
+        cause-tagged jit compiles).  Load the written file in Perfetto
+        (https://ui.perfetto.dev) to see per-request tracks with nested
+        queue/batch/stage/decode children.  Requires
+        ``ServeConfig.with_observability()``; disabled tracing exports an
+        empty event list."""
+        out = self.tracer.export_chrome()
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(out, f)
+        return out
+
+    def flight_record(self, last: int | None = None) -> list:
+        """The flight recorder's ring — the last N scheduler/engine
+        decisions (admissions, sheds with their service-model inputs,
+        deadline drops, recompiles), oldest first.  Empty when the
+        recorder is disabled."""
+        return [] if self.recorder is None else self.recorder.dump(last)
+
+    def metrics_snapshot(self) -> dict:
+        """Structured dump of the metrics behind :meth:`stats`
+        (name -> {kind, series}): the server's own registry merged with
+        the shared engine's (the engine serves every server on its
+        backend, so it keeps a registry of its own)."""
+        out = (self.engine.metrics.snapshot()
+               if self.engine is not None else {})
+        out.update(self.metrics.snapshot())
+        return out
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of :meth:`metrics_snapshot`."""
+        parts = [self.metrics.render_text()]
+        if self.engine is not None:
+            parts.append(self.engine.metrics.render_text())
+        return "".join(parts)
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:

@@ -1,0 +1,366 @@
+"""Observability subsystem: metrics registry semantics and Prometheus
+exposition, span tracer nesting + Chrome export, flight-recorder ring,
+TraceLog writer/reader thread safety, and the served-burst integration
+invariants (nested request spans, cause-tagged compiles, zero compile
+events after warmup, stats() parity)."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DenseRerank, JaxBackend, Retrieve
+from repro.obs import (CounterMap, FlightRecorder, MetricsRegistry,
+                       NOOP_SPAN, Tracer)
+from repro.serve import PipelineServer, ServeConfig
+from repro.serve.request import RequestTrace
+from repro.serve.trace import TraceLog, latency_summary
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests", ("outcome",))
+    c.inc(labels=("ok",))
+    c.inc(2, labels=("ok",))
+    c.inc(labels=("err",))
+    assert c.value(("ok",)) == 3.0
+    assert c.value(("err",)) == 1.0
+    g = reg.gauge("depth", "queue depth")
+    g.set(7)
+    g.add(-2)
+    assert g.value() == 5.0
+    g.set_fn(lambda: 11.0)
+    assert reg.snapshot()["depth"]["series"][""] == 11
+    h = reg.histogram("lat_ms", "latency", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    st = h.stats()
+    assert st["count"] == 4 and st["min"] == 0.5 and st["max"] == 500.0
+    assert st["mean"] == pytest.approx(555.5 / 4)
+
+
+def test_registry_get_or_create_is_idempotent_and_kind_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "x", ("k",))
+    b = reg.counter("x_total")
+    assert a is b                      # shared components aggregate
+    a.inc(labels=("v",))
+    assert b.value(("v",)) == 1.0
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+
+
+def test_render_text_escapes_label_values():
+    reg = MetricsRegistry()
+    c = reg.counter("esc_total", "escaping", ("q",))
+    c.inc(labels=('back\\slash "quoted"\nnewline',))
+    text = reg.render_text()
+    assert ('esc_total{q="back\\\\slash \\"quoted\\"\\nnewline"} 1'
+            in text)
+    assert "# TYPE esc_total counter" in text
+    assert "# HELP esc_total escaping" in text
+
+
+def test_histogram_exposition_buckets_are_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("h_ms", "", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 1.6, 3.0, 99.0):
+        h.observe(v)
+    lines = reg.render_text().splitlines()
+    buckets = [ln for ln in lines if ln.startswith("h_ms_bucket")]
+    assert buckets == ['h_ms_bucket{le="1"} 1', 'h_ms_bucket{le="2"} 3',
+                       'h_ms_bucket{le="4"} 4', 'h_ms_bucket{le="+Inf"} 5']
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in buckets]
+    assert counts == sorted(counts)           # cumulative => monotone
+    assert "h_ms_sum" in "\n".join(lines)
+    assert 'h_ms_count 5' in lines
+
+
+def test_empty_registry_renders_empty():
+    reg = MetricsRegistry()
+    assert reg.render_text() == ""
+    assert reg.snapshot() == {}
+
+
+def test_countermap_is_dict_shaped():
+    reg = MetricsRegistry()
+    cm = CounterMap(reg.counter("tuning_total", "", ("counter",)),
+                    ("hits", "misses"))
+    cm["hits"] += 1
+    cm["hits"] += 1
+    cm["misses"] = 5
+    assert dict(cm) == {"hits": 2, "misses": 5}
+    with pytest.raises(KeyError):
+        cm["unknown"] += 1
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_nests_via_stack_and_explicit_parent_wins():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", cat="t") as outer:
+        with tr.span("inner", cat="t") as inner:
+            assert inner.span_id != outer.span_id
+        detached = tr.begin("detached", parent=None)
+        detached.end()
+    orphan = tr.add_span("retro", 0.0, 0.1, parent=outer.span_id, tid=42)
+    recs = {r["name"]: r for r in tr.records()}
+    assert recs["inner"]["parent"] == outer.span_id
+    assert recs["outer"]["parent"] is None
+    assert recs["detached"]["parent"] is None
+    assert recs["retro"]["parent"] == outer.span_id and orphan is not None
+    assert recs["retro"]["tid"] == 42
+
+
+def test_tracer_chrome_export_is_valid_and_bounded():
+    tr = Tracer(enabled=True, capacity=8)
+    for i in range(20):
+        with tr.span(f"s{i}", cat="c", i=i):
+            pass
+    tr.event("mark", cat="c")
+    out = json.loads(tr.export_chrome_json())
+    assert len(out["traceEvents"]) == 8          # ring bound held
+    assert out["otherData"]["dropped_records"] == 13
+    for ev in out["traceEvents"]:
+        assert {"name", "ph", "ts", "pid", "tid", "args"} <= set(ev)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+        else:
+            assert ev["ph"] == "i" and ev["s"] == "t"
+
+
+def test_disabled_tracer_is_noop():
+    tr = Tracer(enabled=False)
+    assert tr.span("x") is NOOP_SPAN
+    assert tr.begin("x") is NOOP_SPAN
+    assert tr.add_span("x", 0.0, 1.0) is None
+    assert tr.event("x") is None
+    assert len(tr) == 0
+    assert tr.export_chrome()["traceEvents"] == []
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_ring_and_kinds():
+    fr = FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.record("admit", rid=i)
+    fr.record("shed_door", rid=99)
+    events = fr.dump()
+    assert len(events) == 4                       # bounded
+    assert fr.n_recorded == 11
+    assert events[-1]["kind"] == "shed_door"
+    assert all("t" in e for e in events)
+    assert fr.kinds() == {"admit": 3, "shed_door": 1}
+    assert fr.dump(last=2) == events[-2:]
+    fr.clear()
+    assert fr.dump() == []
+
+
+# ---------------------------------------------------------------------------
+# TraceLog: registry-backed counters + thread safety
+# ---------------------------------------------------------------------------
+
+def _mk_trace(rid, *, tenant="default", lane="default", timed_out=False,
+              n_tokens=0):
+    tr = RequestTrace(rid=rid, tenant=tenant, lane=lane)
+    tr.latency_ms = 1.0 + (rid % 7)
+    tr.queue_wait_ms = 0.25
+    tr.cache_hit_depth = rid % 3
+    tr.timed_out = timed_out
+    tr.ttft_ms = 0.5 if n_tokens else 0.0
+    tr.n_tokens = n_tokens
+    return tr
+
+
+def test_tracelog_summary_is_registry_view():
+    log = TraceLog(capacity=64)
+    log.register_tenant("default")
+    for i in range(10):
+        log.record(_mk_trace(i, n_tokens=4 if i % 2 else 0))
+    log.record(_mk_trace(10, timed_out=True))
+    log.record_batch(5)
+    s = log.summary()
+    assert s["served"] == 10 and s["timed_out"] == 1
+    assert s["batches"] == 1 and s["max_batch_size"] == 5
+    assert s["decode"]["requests"] == 5 and s["decode"]["tokens"] == 20
+    # the identical numbers must be visible in the Prometheus exposition
+    text = log.metrics.render_text()
+    assert 'serve_requests_total{tenant="default",outcome="served"} 10' \
+        in text
+    assert 'serve_decode_tokens_total 20' in text
+
+
+def test_tracelog_threaded_writers_vs_readers():
+    log = TraceLog(capacity=128)
+    log.register_tenant("default")
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def writer(base):
+        i = 0
+        try:
+            while not stop.is_set():
+                log.record(_mk_trace(base + i, n_tokens=i % 3))
+                log.record_batch(1 + i % 8)
+                log.record_stage("retrieve", 0.5)
+                i += 1
+        except BaseException as e:      # surfaced below
+            errors.append(e)
+
+    def reader():
+        last_served = last_batches = -1
+        try:
+            while not stop.is_set():
+                s = log.summary()
+                assert s["served"] >= last_served      # monotone counters
+                assert s["batches"] >= last_batches
+                last_served, last_batches = s["served"], s["batches"]
+                log.metrics.snapshot()
+                latency_summary([1.0, 2.0])
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(k * 1_000_000,))
+               for k in range(2)]
+    threads += [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join(10)
+    assert not errors, errors
+    s = log.summary()
+    assert s["served"] > 0 and s["batches"] > 0
+
+
+# ---------------------------------------------------------------------------
+# served burst integration: spans nest, compiles are cause-tagged, the
+# post-warmup trace carries zero compile events, stats() keeps its shape
+# ---------------------------------------------------------------------------
+
+def _row(Q, i):
+    return {k: np.asarray(v)[i:i + 1] for k, v in Q.items()}
+
+
+@pytest.fixture(scope="module")
+def obs_server(small_ir):
+    env = small_ir
+    backend = JaxBackend(env["index"], default_k=60, query_chunk=4,
+                         dense=env["backend"].dense)
+    cfg = (ServeConfig.default(max_wait_ms=2.0)
+           .with_observability(True))
+    pipe = (Retrieve("BM25", k=30) >> DenseRerank(alpha=0.3)) % 10
+    server = PipelineServer(pipe, backend, cfg)
+    server.warmup(env["Q"])
+    warm_records = server.tracer.records()
+    server.tracer.clear()
+    reqs = [server.submit_one(_row(env["Q"], i % 8)) for i in range(12)]
+    server.pump()
+    for r in reqs:
+        r.wait(60)
+    return {"server": server, "warm_records": warm_records}
+
+
+def test_burst_trace_nests_request_children(obs_server):
+    out = obs_server["server"].trace_export()
+    evs = out["traceEvents"]
+    json.loads(json.dumps(out))                  # valid Chrome trace JSON
+    ids = {e["args"]["span_id"] for e in evs}
+    roots = [e for e in evs if e["name"] == "serve.request"]
+    assert len(roots) == 12
+    by_parent: dict = {}
+    for e in evs:
+        by_parent.setdefault(e["args"].get("parent_id"), []).append(e)
+    for root in roots:
+        kids = by_parent.get(root["args"]["span_id"], [])
+        names = {k["name"] for k in kids}
+        assert "serve.queue" in names and "serve.batch" in names
+        # children nest inside the request's [t_arrival, t_done] window
+        t0, t1 = root["ts"], root["ts"] + root["dur"]
+        for k in kids:
+            assert k["ts"] >= t0 - 1.0
+            assert k["ts"] + k.get("dur", 0.0) <= t1 + 1.0
+    assert all(e["args"].get("parent_id") in ids or
+               e["args"].get("parent_id") is None for e in evs)
+
+
+def test_warmup_compiles_are_cause_tagged(obs_server):
+    compiles = [r for r in obs_server["warm_records"]
+                if r["name"] == "engine.jit_compile"]
+    assert compiles, "warmup on a fresh backend must jit-compile"
+    assert all(r["args"]["cause"] in ("cold_rung", "ladder_miss", "pinned")
+               for r in compiles)
+    assert {"cold_rung"} <= {r["args"]["cause"] for r in compiles}
+
+
+def test_no_compile_events_after_warmup(obs_server):
+    server = obs_server["server"]
+    post = [r for r in server.tracer.records()
+            if r["name"] == "engine.jit_compile"]
+    assert post == []
+    assert server.stats()["recompiles_since_warmup"] == 0
+
+
+def test_stats_parity_and_registry_backing(obs_server):
+    server = obs_server["server"]
+    s = server.stats()
+    for key in ("pipeline", "chain_len", "config", "scheduler", "served",
+                "timed_out", "shed", "errors", "late", "batches",
+                "mean_batch_size", "max_batch_size", "cache_hit_depths",
+                "lane_served", "pipelines", "latency_ms", "queue_wait_ms",
+                "stage_cache", "cross_pipeline_hits", "engine",
+                "recompiles_since_warmup", "tuning", "tuning_profile"):
+        assert key in s, key
+    # field-for-field: the summary dict and the registry agree
+    snap = server.metrics_snapshot()
+    assert (snap["serve_requests_total"]["series"]
+            ["tenant=default,outcome=served"] == s["served"] == 12)
+    assert snap["serve_batches_total"]["series"][""] == s["batches"]
+    text = server.metrics_text()
+    assert "# TYPE serve_requests_total counter" in text
+    assert "# TYPE engine_compiles_total counter" in text
+    assert "# TYPE sched_requests_total counter" in text
+    assert "# TYPE stage_cache_lookups_total counter" in text
+
+
+def test_flight_recorder_captured_lifecycle(obs_server):
+    server = obs_server["server"]
+    events = server.flight_record()
+    kinds = {e["kind"] for e in events}
+    assert "admit" in kinds and "batch_close" in kinds
+    admits = [e for e in events if e["kind"] == "admit"]
+    assert all("rid" in e and "lane" in e for e in admits)
+
+
+def test_trace_export_writes_perfetto_file(obs_server, tmp_path):
+    path = tmp_path / "trace.json"
+    out = obs_server["server"].trace_export(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == json.loads(json.dumps(out))
+    assert on_disk["displayTimeUnit"] == "ms"
+
+
+def test_observability_disabled_is_default_and_cheap(small_ir):
+    env = small_ir
+    server = PipelineServer(Retrieve("BM25") % 10, env["backend"],
+                            ServeConfig.default())
+    req = server.submit_one(_row(env["Q"], 0))
+    server.pump()
+    req.wait(30)
+    assert not server.tracer.enabled
+    assert server.trace_export()["traceEvents"] == []
+    assert server.flight_record() == []
+    # metrics stay on regardless: stats() is always registry-backed
+    assert server.stats()["served"] == 1
+    assert "serve_requests_total" in server.metrics_snapshot()
